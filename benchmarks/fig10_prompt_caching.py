@@ -1,0 +1,85 @@
+"""Figure 10 / Appendix B.4 (prompt caching x self-reflection).
+
+Two validations:
+  1. ANALYTIC — the accounting stack reproduces the paper's trade-off on
+     the quoted setup (~1000-token text-to-SQL prompt, 3 reflection
+     rounds): substantial cost reduction (paper: up to 28%; our Bedrock
+     pricing reconstruction lands ~33%, sensitivity-analyzed in
+     EXPERIMENTS.md), with near-linear cost in rounds when caching;
+     latency benefits are minimal (cache reads are cheap but decode
+     dominates).
+  2. MECHANISTIC — the REAL engine's prefix cache: reflection-style
+     conversation extension pays fresh prefill only for the suffix, and
+     cached vs uncached engines emit IDENTICAL tokens.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.budget import InferenceStrategy
+from repro.core.reflection import evaluate_strategy
+
+
+def run(verbose: bool = True):
+    rows = []
+    # ---- analytic reproduction -------------------------------------------
+    savings = {}
+    for rounds in (1, 3):
+        on = evaluate_strategy("sonnet37", "spider", InferenceStrategy(rounds),
+                               50, prompt_caching=True)
+        off = evaluate_strategy("sonnet37", "spider", InferenceStrategy(rounds),
+                                50, prompt_caching=False)
+        savings[rounds] = 1 - on["cost_usd"] / off["cost_usd"]
+        lat_delta = abs(on["latency_s"] - off["latency_s"]) / off["latency_s"]
+        if verbose:
+            print(f"fig10: rounds={rounds} cost saving "
+                  f"{savings[rounds]*100:.1f}%  latency delta {lat_delta*100:.1f}%")
+        assert lat_delta < 0.25, "caching should not change latency much"
+    assert savings[3] > savings[1], "saving grows with rounds"
+    assert 0.20 <= savings[3] <= 0.40, \
+        f"3-round saving {savings[3]*100:.0f}% (paper: up to 28%)"
+    rows.append(("fig10_cache_saving_r3_pct", 0.0, f"{savings[3]*100:.1f}"))
+    rows.append(("fig10_cache_saving_r1_pct", 0.0, f"{savings[1]*100:.1f}"))
+
+    # ---- mechanistic check on the real engine ------------------------------
+    from repro.configs.base import ServeConfig
+    from repro.models.registry import build_model, get_smoke_config
+    from repro.serving.engine import Engine
+    from repro.serving.request import Request
+
+    cfg = get_smoke_config("qwen3_0_6b").replace(dtype="float32")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+
+    def reflect_run(prefix_cache: bool):
+        eng = Engine(m, params, ServeConfig(max_batch=2, max_seq=192,
+                                            page_size=8,
+                                            prefix_cache=prefix_cache))
+        convo = [1] + list(range(10, 40))         # "prompt"
+        outs, usage = [], []
+        for _ in range(3):                        # 3 reflection rounds
+            req = Request(prompt=list(convo), max_new_tokens=6, eos_id=None)
+            eng.submit(req)
+            eng.run()
+            outs.append(list(req.output))
+            usage.append(req.usage)
+            convo += req.output + [99, 98, 97]    # response + instruction
+        return outs, usage
+
+    outs_c, usage_c = reflect_run(True)
+    outs_n, usage_n = reflect_run(False)
+    assert outs_c == outs_n, "prefix caching must not change outputs"
+    fresh_c = sum(u.input_tokens for u in usage_c)
+    fresh_n = sum(u.input_tokens for u in usage_n)
+    saved = 1 - fresh_c / fresh_n
+    if verbose:
+        print(f"fig10: engine fresh-prefill tokens {fresh_n} -> {fresh_c} "
+              f"({saved*100:.0f}% prefill saved across 3 rounds)")
+    assert saved > 0.4, "engine prefix cache should cut most re-prefill"
+    rows.append(("fig10_engine_prefill_saved_pct", 0.0, f"{saved*100:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,56 @@
+"""Figure 1 (Math500): reflection gains + accuracy-latency Pareto frontier.
+
+Asserted paper claims:
+  * Nova Micro gains ~220% from 1 reflection and keeps it at 3 (§4.1);
+  * Sonnet 3.7: 74% -> 86% (r1) -> 88% (r3);
+  * a single reflection captures most of the benefit (diminishing returns);
+  * Sonnet 3.7 low thinking budget is dominated by 1-reflection;
+  * high thinking budget reaches the top accuracy (93%).
+"""
+from __future__ import annotations
+
+from benchmarks.paper_grid import eval_domain, frontier_rows, gain_pct, print_grid
+from repro.core.pareto import dominates
+
+
+def run(verbose: bool = True):
+    points, cells = eval_domain("math500")
+    if verbose:
+        print_grid("math500", cells)
+
+    g_micro_1 = gain_pct(cells, "nova_micro", 1)
+    g_micro_3 = gain_pct(cells, "nova_micro", 3)
+    assert 170 <= g_micro_1 <= 270, f"nova_micro r1 gain {g_micro_1:.0f}% (paper ~220%)"
+    assert g_micro_3 >= 170, f"gain retained at 3 rounds: {g_micro_3:.0f}%"
+
+    s37_0 = cells[("sonnet37", "reflect0")]["accuracy"]
+    s37_1 = cells[("sonnet37", "reflect1")]["accuracy"]
+    s37_3 = cells[("sonnet37", "reflect3")]["accuracy"]
+    assert abs(s37_0 - 74) < 3 and abs(s37_1 - 86) < 3 and abs(s37_3 - 88) < 3
+
+    # diminishing returns: round 1 captures most of the r3 gain
+    for m in ("nova_micro", "nova_lite", "nova_pro", "sonnet37"):
+        r0 = cells[(m, "reflect0")]["accuracy"]
+        r1 = cells[(m, "reflect1")]["accuracy"]
+        r3 = cells[(m, "reflect3")]["accuracy"]
+        assert (r1 - r0) >= 0.7 * (r3 - r0), f"{m}: round-1 share too small"
+
+    # dominance: sonnet37 r1 dominates its low thinking budget in acc-latency
+    p = {pt.name: pt for pt in points}
+    low, r1pt = p["sonnet37@think_low"], p["sonnet37@reflect1"]
+    assert r1pt.accuracy >= low.accuracy and r1pt.latency_s <= low.latency_s * 1.3
+
+    hi = p["sonnet37@think_high"]
+    assert hi.accuracy == max(pt.accuracy for pt in points), \
+        "high thinking budget should top the accuracy range"
+
+    rows = [("fig1_nova_micro_gain_r1_pct", 0.0, f"{g_micro_1:.0f}"),
+            ("fig1_sonnet37_acc_r0_r1_r3", 0.0, f"{s37_0:.0f}/{s37_1:.0f}/{s37_3:.0f}"),
+            ("fig1_think_high_acc", 0.0, f"{hi.accuracy:.1f}")]
+    rows += frontier_rows("math500", points)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,45 @@
+"""Figure 2 (Spider text-to-SQL): reflection is mixed-to-negative here.
+
+Asserted paper claims (§4.2):
+  * Sonnet 3.7 is the only Claude with consistent gains (+2.3% r1, +5.6% r3);
+  * Sonnet 3.5 v2 degrades (~-4.8%);
+  * Nova Lite gains at r1 but drops below that at r3 (inconsistent);
+  * built-in reasoning budgets fall behind 3-round reflection accuracy.
+"""
+from __future__ import annotations
+
+from benchmarks.paper_grid import eval_domain, frontier_rows, gain_pct, print_grid
+
+
+def run(verbose: bool = True):
+    points, cells = eval_domain("spider")
+    if verbose:
+        print_grid("spider", cells)
+
+    g37_1, g37_3 = gain_pct(cells, "sonnet37", 1), gain_pct(cells, "sonnet37", 3)
+    assert 0 < g37_1 < 6 and 3 < g37_3 < 9, (g37_1, g37_3)
+
+    g35_1 = gain_pct(cells, "sonnet35v2", 1)
+    assert g35_1 < -2, f"sonnet35v2 should degrade: {g35_1:.1f}%"
+
+    lite0 = cells[("nova_lite", "reflect0")]["accuracy"]
+    lite1 = cells[("nova_lite", "reflect1")]["accuracy"]
+    lite3 = cells[("nova_lite", "reflect3")]["accuracy"]
+    assert lite1 > lite0 and lite3 < lite1, "nova_lite inconsistent pattern"
+
+    think = {s: cells[("sonnet37", f"think_{s}")]["accuracy"]
+             for s in ("low", "high")}
+    r3 = cells[("sonnet37", "reflect3")]["accuracy"]
+    assert all(v < r3 for v in think.values()), \
+        "built-in reasoning should trail 3-round reflection on Spider"
+
+    rows = [("fig2_sonnet37_gain_r1_pct", 0.0, f"{g37_1:.1f}"),
+            ("fig2_sonnet37_gain_r3_pct", 0.0, f"{g37_3:.1f}"),
+            ("fig2_sonnet35v2_gain_r1_pct", 0.0, f"{g35_1:.1f}")]
+    rows += frontier_rows("spider", points)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,42 @@
+"""Figure 3 (IMDB sentiment): broad but small reflection gains.
+
+Asserted paper claims (§4.3):
+  * Nova Micro jumps 85% -> 95% with one reflection;
+  * Nova Pro / Premier / Llama Maverick are unaffected by reflection;
+  * Mistral Small is the outlier that DEGRADES;
+  * gains are an order of magnitude smaller than math (relative terms).
+"""
+from __future__ import annotations
+
+from benchmarks.paper_grid import eval_domain, frontier_rows, gain_pct, print_grid
+
+
+def run(verbose: bool = True):
+    points, cells = eval_domain("imdb")
+    if verbose:
+        print_grid("imdb", cells)
+
+    m0 = cells[("nova_micro", "reflect0")]["accuracy"]
+    m1 = cells[("nova_micro", "reflect1")]["accuracy"]
+    assert abs(m0 - 85) < 3 and abs(m1 - 95) < 3, (m0, m1)
+
+    for m in ("nova_pro", "nova_premier", "llama_maverick"):
+        assert abs(gain_pct(cells, m, 1)) < 2.0, f"{m} should be flat"
+
+    assert gain_pct(cells, "mistral_small", 3) < -1.0, "mistral_small outlier"
+
+    # relative gains an order smaller than math500
+    from benchmarks.paper_grid import eval_domain as ed
+    imdb_gain = gain_pct(cells, "nova_micro", 1)
+    assert imdb_gain < 25, "IMDB gains should be far below math's 220%"
+
+    rows = [("fig3_nova_micro_r0_r1", 0.0, f"{m0:.1f}->{m1:.1f}"),
+            ("fig3_mistral_small_gain_r3_pct", 0.0,
+             f"{gain_pct(cells, 'mistral_small', 3):.1f}")]
+    rows += frontier_rows("imdb", points)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

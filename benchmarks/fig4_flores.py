@@ -1,0 +1,64 @@
+"""Figure 4 (Flores-200 translation, METEOR): reflection HURTS Nova.
+
+Asserted paper claims (§4.4):
+  * every Nova except Premier drops at 1 reflection, partially recovers at
+    3 but stays below baseline;
+  * Mistral Small / Llama Maverick drop with NO recovery;
+  * Mistral Large gains at 1 then degrades at 3;
+  * Claude improves with reflection; Sonnet 3.7 high budget is the best
+    Claude configuration;
+  * Nova dominates Claude in the latency-accuracy space.
+"""
+from __future__ import annotations
+
+from benchmarks.paper_grid import eval_domain, frontier_rows, print_grid
+
+
+def run(verbose: bool = True):
+    points, cells = eval_domain("flores")
+    if verbose:
+        print_grid("flores", cells)
+
+    def acc(m, s):
+        return cells[(m, s)]["accuracy"]
+
+    for m in ("nova_micro", "nova_lite", "nova_pro"):
+        a0, a1, a3 = acc(m, "reflect0"), acc(m, "reflect1"), acc(m, "reflect3")
+        assert a1 < a0, f"{m}: r1 should dip ({a0} -> {a1})"
+        assert a1 < a3 < a0, f"{m}: partial recovery below baseline"
+    assert acc("nova_premier", "reflect1") >= acc("nova_premier", "reflect0")
+
+    for m in ("mistral_small", "llama_maverick"):
+        assert acc(m, "reflect1") < acc(m, "reflect0")
+        assert acc(m, "reflect3") <= acc(m, "reflect1") + 0.2, f"{m}: no recovery"
+
+    ml = [acc("mistral_large", f"reflect{r}") for r in (0, 1, 3)]
+    assert ml[1] > ml[0] and ml[2] < ml[1], "mistral_large: gain@1, drop@3"
+
+    claude_best = max(
+        (s, cells[("sonnet37", s)]["accuracy"]) for s in
+        ("reflect0", "reflect1", "reflect3", "think_low", "think_high")
+    )
+    best_claude_cfg = max(
+        ["reflect0", "reflect1", "reflect3", "think_low", "think_high"],
+        key=lambda s: cells[("sonnet37", s)]["accuracy"])
+    assert best_claude_cfg == "think_high", best_claude_cfg
+
+    # Nova dominance over Claude in accuracy-latency
+    nova_pro0 = cells[("nova_pro", "reflect0")]
+    for claude in ("sonnet37", "sonnet35v2", "haiku35"):
+        c = cells[(claude, "reflect0")]
+        assert nova_pro0["accuracy"] > c["accuracy"] and \
+            nova_pro0["latency_s"] < c["latency_s"], \
+            f"nova_pro should dominate {claude} baseline"
+
+    rows = [("fig4_nova_pro_meteor_r0_r1_r3", 0.0,
+             "/".join(f"{acc('nova_pro', f'reflect{r}'):.1f}" for r in (0, 1, 3))),
+            ("fig4_best_claude_cfg", 0.0, best_claude_cfg)]
+    rows += frontier_rows("flores", points)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,61 @@
+"""Kernel microbenchmarks (interpret mode on CPU = correctness-scale
+timings; real performance comes from the TPU Mosaic pipeline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose: bool = True):
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    rows = []
+
+    q = jax.random.normal(ks[0], (1, 4, 512, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 512, 64), jnp.float32)
+    us = _time(ops.flash_attention, q, k, v, interpret=True)
+    rows.append(("kernel_flash_attention_512", us, "B1H4S512d64"))
+
+    qd = jax.random.normal(ks[3], (2, 2, 2, 64), jnp.float32)
+    kd = jax.random.normal(ks[4], (2, 256, 2, 64), jnp.float32)
+    vd = jax.random.normal(ks[5], (2, 256, 2, 64), jnp.float32)
+    tok = jnp.broadcast_to(jnp.arange(256)[None], (2, 256)).astype(jnp.int32)
+    pos = jnp.array([255, 255], jnp.int32)
+    us = _time(ops.decode_attention, qd, kd, vd, tok, pos, interpret=True)
+    rows.append(("kernel_decode_attention_256", us, "B2C256"))
+
+    B, S, D, N = 1, 64, 128, 8
+    dt = jax.nn.softplus(jax.random.normal(ks[6], (B, S, D))) * 0.1
+    Bm = jax.random.normal(ks[7], (B, S, N))
+    us = _time(ops.mamba_scan, dt, Bm, Bm, dt, -jnp.ones((D, N)),
+               jnp.ones((D,)), jnp.zeros((B, D, N)), interpret=True)
+    rows.append(("kernel_mamba_scan_64", us, f"S{S}D{D}N{N}"))
+
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 64, 256)))
+    b = jax.random.normal(ks[1], (2, 64, 256))
+    us = _time(ops.rglru_scan, a, b, jnp.zeros((2, 256)), interpret=True)
+    rows.append(("kernel_rglru_scan_64", us, "S64W256"))
+
+    if verbose:
+        for n, us, d in rows:
+            print(f"{n}: {us:.0f} us/call ({d})")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

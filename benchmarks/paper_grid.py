@@ -1,0 +1,71 @@
+"""Shared grid evaluation for the per-figure benchmarks (Figs 1-4).
+
+Evaluates every (model x strategy) cell of one domain through the
+calibrated simulator + accounting stack and derives the Pareto frontier,
+mirroring the paper's Figure (a) percentage-gain panels and Figure (b)
+accuracy-latency frontiers.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import quality_sim as QS
+from repro.core.budget import BudgetTier, InferenceStrategy
+from repro.core.pareto import ConfigPoint, pareto_frontier
+from repro.core.reflection import evaluate_strategy
+
+N_EXAMPLES = 2000
+
+
+def eval_domain(domain: str, include_thinking: bool = True
+                ) -> Tuple[List[ConfigPoint], Dict]:
+    points: List[ConfigPoint] = []
+    cells: Dict[Tuple[str, str], Dict] = {}
+    for model in QS.MODELS:
+        strategies = [InferenceStrategy(0), InferenceStrategy(1),
+                      InferenceStrategy(3)]
+        if include_thinking and "think" in QS.QUALITY[domain][model]:
+            strategies += [InferenceStrategy(0, budget=BudgetTier.LOW),
+                           InferenceStrategy(0, budget=BudgetTier.HIGH)]
+        for s in strategies:
+            r = evaluate_strategy(model, domain, s, N_EXAMPLES, seed=17)
+            cells[(model, s.name)] = r
+            points.append(ConfigPoint(
+                name=f"{model}@{s.name}", model=model, strategy=s.name,
+                accuracy=r["accuracy"], latency_s=r["latency_s"],
+                cost_usd=r["cost_usd"]))
+    return points, cells
+
+
+def gain_pct(cells: Dict, model: str, rounds: int) -> float:
+    base = cells[(model, "reflect0")]["accuracy"]
+    acc = cells[(model, f"reflect{rounds}")]["accuracy"]
+    return (acc - base) / max(base, 1e-9) * 100.0
+
+
+def print_grid(domain: str, cells: Dict) -> None:
+    print(f"\n== {domain} grid (accuracy / $ / s) ==")
+    strategies = sorted({k[1] for k in cells})
+    for model in QS.MODELS:
+        row = [f"{model:14s}"]
+        for s in ("reflect0", "reflect1", "reflect3"):
+            c = cells.get((model, s))
+            row.append(f"{s}:{c['accuracy']:5.1f}|{c['cost_usd']:.4f}|{c['latency_s']:5.1f}")
+        print("  ".join(row))
+    for s in strategies:
+        if s.startswith("think"):
+            for model in QS.MODELS:
+                c = cells.get((model, s))
+                if c:
+                    print(f"{model:14s}  {s}: {c['accuracy']:5.1f} | "
+                          f"${c['cost_usd']:.4f} | {c['latency_s']:5.1f}s")
+
+
+def frontier_rows(domain: str, points) -> List[Tuple[str, float, str]]:
+    front = pareto_frontier(points)
+    rows = []
+    for p in front:
+        rows.append((f"{domain}_frontier_{p.name}", 0.0,
+                     f"acc={p.accuracy:.1f};lat={p.latency_s:.1f}s;cost=${p.cost_usd:.4f}"))
+    return rows

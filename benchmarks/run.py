@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure + systems benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is 0 for
+analytic reproductions; derived carries the figure's key quantity).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.fig1_math500",
+    "benchmarks.fig2_spider",
+    "benchmarks.fig3_imdb",
+    "benchmarks.fig4_flores",
+    "benchmarks.table1_feedback",
+    "benchmarks.fig5_transitions",
+    "benchmarks.fig9_significance",
+    "benchmarks.fig10_prompt_caching",
+    "benchmarks.table2_3_deployment",
+    "benchmarks.best_of_n",
+    "benchmarks.roofline",
+    "benchmarks.engine_micro",
+    "benchmarks.kernels_micro",
+]
+
+
+def main() -> None:
+    import importlib
+
+    all_rows = []
+    failures = []
+    for name in MODULES:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(name)
+            rows = mod.run(verbose=True)
+            all_rows.extend(rows)
+            print(f"[{name}] OK ({time.time()-t0:.1f}s)\n")
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            print(f"[{name}] FAILED:")
+            traceback.print_exc()
+
+    print("\nname,us_per_call,derived")
+    for n, us, d in all_rows:
+        print(f"{n},{us:.1f},{d}")
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

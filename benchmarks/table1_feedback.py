@@ -1,0 +1,71 @@
+"""Table 1 (feedback mechanisms on Spider): exact-value reproduction +
+the paper's aggregate claim, plus a REAL demonstration of the three
+mechanisms (no/judge/execution feedback) on the synthetic SQL suite.
+
+Asserted claims (§4.5):
+  * feedback improves reflection quality in ~61% of cases;
+  * Nova models prefer judge/no feedback, Claude prefers SQL execution
+    (on average).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.quality_sim import FEEDBACK_TABLE1
+from repro.core.feedback import ExecutionFeedback, LLMJudgeFeedback, NoFeedback
+from repro.data.tasks import make_sql_tasks
+
+
+def run(verbose: bool = True):
+    # --- aggregate claim over the exact paper table ------------------------
+    improved = total = 0
+    for model, cols in FEEDBACK_TABLE1.items():
+        for fb in ("judge", "exec"):
+            for i in (0, 1):       # 1-round, 3-round
+                total += 1
+                if cols[fb][i] > cols["none"][i]:
+                    improved += 1
+    frac = improved / total
+    if verbose:
+        print(f"table1: feedback improves reflection in {frac*100:.0f}% of "
+              f"cells (paper: 61%)")
+    assert 0.5 <= frac <= 0.7, frac
+
+    # family preference (mean over rounds)
+    nova = [m for m in FEEDBACK_TABLE1 if m.startswith("nova")]
+    claude = [m for m in FEEDBACK_TABLE1 if not m.startswith("nova")]
+
+    def mean_for(models, fb):
+        return float(np.mean([FEEDBACK_TABLE1[m][fb] for m in models]))
+
+    assert mean_for(claude, "exec") > mean_for(claude, "none"), \
+        "Claude should benefit from SQL execution feedback"
+    nova_judge = mean_for(nova, "judge")
+    nova_exec = mean_for(nova, "exec")
+    assert nova_judge >= nova_exec - 0.5, \
+        "Nova should lean judge/no-feedback over execution"
+
+    # --- REAL mechanisms on the synthetic SQL tasks -------------------------
+    tasks = make_sql_tasks(20, seed=3)
+    fb_exec, fb_judge, fb_none = (ExecutionFeedback(), LLMJudgeFeedback(seed=1),
+                                  NoFeedback())
+    bad_sql = "<SQL>SELECT bogus FROM orchestra</SQL>"
+    good_sql = f"<SQL>{tasks[0].gold_query}</SQL>"
+    e1 = fb_exec.feedback(tasks[0], bad_sql)
+    e2 = fb_exec.feedback(tasks[0], good_sql)
+    assert "error" in e1 and "returned" in e2, (e1, e2)
+    j = fb_judge.feedback(tasks[0], good_sql)
+    assert "CORRECT" in j or "INCORRECT" in j
+    assert fb_none.feedback(tasks[0], good_sql) == ""
+    if verbose:
+        print(f"  exec feedback on bad SQL : {e1[:70]}")
+        print(f"  exec feedback on good SQL: {e2[:70]}")
+
+    return [("table1_feedback_improves_frac", 0.0, f"{frac:.2f}"),
+            ("table1_claude_exec_minus_none", 0.0,
+             f"{mean_for(claude, 'exec') - mean_for(claude, 'none'):.2f}")]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

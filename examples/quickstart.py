@@ -1,0 +1,52 @@
+"""Quickstart: build a model, serve a reflection conversation, see the
+prompt cache + budget tiers + cost accounting in action.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.base import ServeConfig
+from repro.core.accounting import CostModel
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.registry import build_model, get_smoke_config
+from repro.serving.engine import Engine
+from repro.serving.request import BudgetTier, Request
+
+
+def main():
+    cfg = get_smoke_config("qwen3_0_6b").replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = ByteTokenizer()
+    engine = Engine(model, params, ServeConfig(max_batch=4, max_seq=384,
+                                               page_size=16))
+
+    question = "What is the answer to 2+2? Answer in <answer></answer> tags."
+    convo = question
+
+    print("== reflection conversation through the engine ==")
+    cost = CostModel.for_model("haiku35")
+    total = 0.0
+    for rnd in range(3):
+        req = Request(prompt=tok.encode(convo), max_new_tokens=16,
+                      eos_id=None, budget=BudgetTier.LOW,
+                      conversation_id="demo")
+        engine.submit(req)
+        engine.run()
+        response = tok.decode(req.output)
+        dollars = cost.cost(req.usage)
+        total += dollars
+        print(f"round {rnd}: fresh_in={req.usage.input_tokens:4d} "
+              f"cache_read={req.usage.cache_read_tokens:4d} "
+              f"out={req.usage.output_tokens:3d}  ${dollars:.6f}")
+        convo += response + " Please reiterate your answer. " + question
+
+    stats = engine.prefix_cache.stats
+    print(f"\nprefix cache: {stats['hits']} full + {stats['partial_hits']} "
+          f"partial hits, {stats['tokens_saved']} prefill tokens saved")
+    print(f"total conversation cost: ${total:.6f} (haiku35 pricing)")
+    print("(random weights -> noise text; see examples/train_100m.py)")
+
+
+if __name__ == "__main__":
+    main()

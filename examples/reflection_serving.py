@@ -1,0 +1,63 @@
+"""End-to-end serving driver: batched reflection requests through the
+engine with execution feedback + prompt caching + budget tiers.
+
+    PYTHONPATH=src python examples/reflection_serving.py
+
+Runs the paper's inference-strategy grid {0,1,3 reflection rounds} x
+{exec feedback on/off} over a batch of synthetic SQL tasks on the real
+engine, then prints the usage/cost table the paper's Figure 2(b) derives.
+"""
+import jax
+
+from repro.configs.base import ServeConfig
+from repro.core.accounting import CostModel, LatencyModel
+from repro.core.budget import InferenceStrategy
+from repro.core.feedback import ExecutionFeedback, NoFeedback
+from repro.core.reflection import EngineBackend, ReflectionController
+from repro.data.tasks import make_sql_tasks
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.registry import build_model, get_smoke_config
+from repro.serving.engine import Engine
+
+
+def main():
+    cfg = get_smoke_config("reflect_demo_100m").replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = ByteTokenizer()
+    tasks = make_sql_tasks(4, seed=0)
+    cost = CostModel.for_model("nova_micro")
+    lat = LatencyModel.for_model("nova_micro")
+
+    print(f"{'strategy':16s}{'feedback':10s}{'fresh_in':>9s}{'cached':>8s}"
+          f"{'out':>6s}{'$':>10s}{'lat(s)':>8s}")
+    for rounds in (0, 1, 3):
+        for fb_name, fb in (("none", NoFeedback()),
+                            ("exec", ExecutionFeedback())):
+            if rounds == 0 and fb_name == "exec":
+                continue
+            engine = Engine(model, params,
+                            ServeConfig(max_batch=4, max_seq=1536,
+                                        page_size=32))
+            ctrl = ReflectionController(InferenceStrategy(rounds,
+                                                          feedback=fb_name),
+                                        feedback=fb)
+            backend = EngineBackend(engine, tok, max_new_tokens=24)
+            usage_in = usage_cached = usage_out = 0
+            dollars = seconds = 0.0
+            for t in tasks:
+                res = ctrl.run_task(backend, t)
+                usage_in += res.usage.input_tokens
+                usage_cached += res.usage.cache_read_tokens
+                usage_out += res.usage.output_tokens
+                dollars += cost.cost(res.usage)
+                seconds += lat.latency(res.usage)
+            print(f"reflect{rounds:<9d}{fb_name:10s}{usage_in:9d}"
+                  f"{usage_cached:8d}{usage_out:6d}{dollars:10.6f}"
+                  f"{seconds:8.2f}")
+    print("\n(untrained weights: accuracy is noise; the table demonstrates "
+          "the engine's reflection/caching/accounting machinery)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Sweet-spot finder: the paper's practitioner guidance as a CLI.
+
+    PYTHONPATH=src python examples/sweet_spot.py --domain math500 \
+        --max-latency 15 --max-cost 0.01
+
+Evaluates the full (model x strategy) grid through the calibrated
+simulator + accounting stack, prints the Pareto frontier, and selects the
+best configuration under your ceilings.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.paper_grid import eval_domain
+from repro.core.pareto import pareto_frontier, sweet_spot
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--domain", default="math500",
+                    choices=["math500", "spider", "imdb", "flores"])
+    ap.add_argument("--max-latency", type=float, default=None)
+    ap.add_argument("--max-cost", type=float, default=None)
+    args = ap.parse_args()
+
+    points, _ = eval_domain(args.domain)
+    front = pareto_frontier(points)
+    print(f"== {args.domain}: accuracy-latency Pareto frontier ==")
+    for p in front:
+        print(f"  {p.name:28s} acc={p.accuracy:5.1f}  lat={p.latency_s:6.1f}s"
+              f"  cost=${p.cost_usd:.4f}")
+
+    best = sweet_spot(points, args.max_latency, args.max_cost)
+    lat = f"{args.max_latency}s" if args.max_latency else "-"
+    c = f"${args.max_cost}" if args.max_cost else "-"
+    if best is None:
+        print(f"\nno configuration satisfies latency<={lat}, cost<={c}")
+    else:
+        print(f"\nsweet spot under latency<={lat}, cost<={c}:")
+        print(f"  -> {best.name}: acc={best.accuracy:.1f} "
+              f"lat={best.latency_s:.1f}s cost=${best.cost_usd:.4f}")
+
+
+if __name__ == "__main__":
+    main()

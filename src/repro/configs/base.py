@@ -1,0 +1,164 @@
+"""Configuration dataclasses for models, input shapes, and serving.
+
+Every assigned architecture gets a ``src/repro/configs/<id>.py`` exporting
+``CONFIG`` (full-size, exercised only via the dry-run) and ``smoke_config()``
+(a reduced variant of the same family for CPU tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture definition.
+
+    ``block_pattern`` lists the residual-block type of every layer in order;
+    supported types: ``attn``, ``moe``, ``mamba``, ``rglru``, ``rg_attn``
+    (RecurrentGemma local-attention block).  The transformer groups the
+    pattern into scanned stages automatically.
+    """
+
+    name: str
+    arch_type: str                       # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    block_pattern: Tuple[str, ...]
+
+    # attention details
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None   # None = full causal attention
+    local_window: int = 2048               # RecurrentGemma local-attn window
+    mlp_act: str = "swiglu"                # swiglu | relu2 | gelu
+
+    # mixture-of-experts
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # state-space (mamba-1)
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0                   # 0 -> ceil(d_model/16)
+
+    # RG-LRU (hybrid)
+    rnn_width: int = 0                     # 0 -> d_model
+
+    # encoder-decoder (audio) / vlm frontend stubs
+    encoder_layers: int = 0
+    encoder_seq: int = 1500                # precomputed frame embeddings
+    num_patches: int = 256                 # precomputed patch embeddings
+
+    # numerics
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"                # activation dtype
+    param_dtype: str = "float32"           # storage dtype (bf16 for mega archs)
+    tie_embeddings: bool = False
+
+    # Megatron-style sequence parallelism: residual stream sharded along
+    # seq over the 'model' axis between blocks (mega-archs only).
+    shard_seq_activations: bool = False
+
+    # citation for the public pool entry
+    source: str = ""
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def lru_width(self) -> int:
+        return self.rnn_width or self.d_model
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                              # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+# The four assigned input shapes.
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# Sliding-window used when a full-attention arch runs long_500k.
+LONG_CONTEXT_WINDOW = 8_192
+
+
+def dense_pattern(n: int) -> Tuple[str, ...]:
+    return ("attn",) * n
+
+
+def moe_pattern(n: int) -> Tuple[str, ...]:
+    return ("moe",) * n
+
+
+def mamba_pattern(n: int) -> Tuple[str, ...]:
+    return ("mamba",) * n
+
+
+def recurrentgemma_pattern(n: int) -> Tuple[str, ...]:
+    """RecurrentGemma interleaves recurrent and local-attention blocks 2:1."""
+    pat = []
+    while len(pat) < n:
+        pat.extend(["rglru", "rglru", "rg_attn"])
+    return tuple(pat[:n])
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1_000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"               # adamw | adafactor
+    microbatch: int = 0                    # 0 = no gradient accumulation
+    remat: bool = True
+    z_loss: float = 1e-4
+    loss_chunk: int = 0                    # 0 = unchunked cross-entropy
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 2048
+    page_size: int = 256                   # prefix-cache page granularity
+    prefix_cache: bool = True
+    max_think_tokens_low: int = 1024       # paper's "low" thinking budget
+    max_think_tokens_high: int = 4096      # paper's "high" thinking budget
+    temperature: float = 0.0
+    seed: int = 0

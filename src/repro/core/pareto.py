@@ -1,0 +1,66 @@
+"""Pareto frontiers over (accuracy, latency, cost) — paper Figs 1-4(b).
+
+A configuration dominates another if it is no worse on every objective
+and strictly better on at least one.  ``sweet_spot`` implements the
+paper's practitioner guidance: best accuracy subject to cost/latency
+ceilings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclass(frozen=True)
+class ConfigPoint:
+    name: str                       # e.g. "nova_micro@r1"
+    model: str
+    strategy: str                   # "reflect0/1/3" | "think_low/high"
+    accuracy: float
+    latency_s: float
+    cost_usd: float
+    meta: Dict = field(default_factory=dict, hash=False, compare=False)
+
+
+def dominates(a: ConfigPoint, b: ConfigPoint) -> bool:
+    ge = (a.accuracy >= b.accuracy and a.latency_s <= b.latency_s
+          and a.cost_usd <= b.cost_usd)
+    gt = (a.accuracy > b.accuracy or a.latency_s < b.latency_s
+          or a.cost_usd < b.cost_usd)
+    return ge and gt
+
+
+def pareto_frontier(points: Sequence[ConfigPoint],
+                    objectives: Sequence[str] = ("accuracy", "latency_s"),
+                    ) -> List[ConfigPoint]:
+    """Non-dominated subset w.r.t. the given objectives (accuracy is
+    maximized; latency/cost minimized), sorted by latency."""
+
+    def better_or_equal(a, b):
+        ok_all, strict = True, False
+        for obj in objectives:
+            av, bv = getattr(a, obj), getattr(b, obj)
+            if obj == "accuracy":
+                ok_all &= av >= bv
+                strict |= av > bv
+            else:
+                ok_all &= av <= bv
+                strict |= av < bv
+        return ok_all and strict
+
+    out = [p for p in points
+           if not any(better_or_equal(q, p) for q in points if q is not p)]
+    return sorted(out, key=lambda p: p.latency_s)
+
+
+def sweet_spot(points: Sequence[ConfigPoint],
+               max_latency_s: Optional[float] = None,
+               max_cost_usd: Optional[float] = None) -> Optional[ConfigPoint]:
+    """Highest-accuracy config under resource ceilings; ties broken by
+    cost then latency (the paper's deployment selection rule)."""
+    feas = [p for p in points
+            if (max_latency_s is None or p.latency_s <= max_latency_s)
+            and (max_cost_usd is None or p.cost_usd <= max_cost_usd)]
+    if not feas:
+        return None
+    return max(feas, key=lambda p: (p.accuracy, -p.cost_usd, -p.latency_s))

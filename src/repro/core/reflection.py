@@ -1,0 +1,198 @@
+"""Self-reflection controller (paper §3.2, Appendix A.2).
+
+Drives multi-round reflect-and-revise conversations through a backend:
+
+  * EngineBackend    — the real serving engine; rounds share a
+    conversation_id so the prefix cache makes round r+1's prefill cost
+    proportional to the suffix (reflection instruction + feedback);
+  * SimulatedBackend — token/quality simulation calibrated to the paper
+    (core/quality_sim.py) driving the SAME controller + accounting path,
+    used to reproduce the paper's tables offline.
+
+The reflection prompt template mirrors Appendix A.2 verbatim.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import quality_sim as QS
+from repro.core.accounting import CostModel, LatencyModel
+from repro.core.budget import InferenceStrategy
+from repro.core.feedback import FeedbackProvider, NoFeedback
+from repro.serving.request import BudgetTier, Request, TokenUsage
+
+REFLECT_TEMPLATE = ("Please reiterate your answer by thinking step by step, "
+                    "making sure to state your answer at the end of the "
+                    "response. {feedback} As a reminder, the original "
+                    "question is {question}")
+
+
+@dataclass
+class RoundRecord:
+    response: str
+    usage: TokenUsage
+    correct: Optional[bool] = None
+    score: Optional[float] = None
+
+
+@dataclass
+class ReflectionResult:
+    rounds: List[RoundRecord]
+    usage: TokenUsage = field(default_factory=TokenUsage)
+
+    @property
+    def final(self) -> RoundRecord:
+        return self.rounds[-1]
+
+
+class EngineBackend:
+    """Runs reflection through the real serving engine."""
+
+    def __init__(self, engine, tokenizer, max_new_tokens: int = 64):
+        self.engine = engine
+        self.tok = tokenizer
+        self.max_new_tokens = max_new_tokens
+
+    def complete(self, conversation: str, conversation_id: str,
+                 budget: BudgetTier) -> Tuple[str, TokenUsage]:
+        req = Request(prompt=self.tok.encode(conversation),
+                      max_new_tokens=self.max_new_tokens,
+                      eos_id=self.tok.eos_id, budget=budget,
+                      conversation_id=conversation_id)
+        self.engine.submit(req)
+        self.engine.run()
+        out = req.output
+        if out and out[-1] == self.tok.eos_id:
+            out = out[:-1]
+        return self.tok.decode(out), req.usage
+
+
+class SimulatedBackend:
+    """Token accounting + calibrated correctness, no model execution.
+
+    Correctness per round follows core.quality_sim trajectories; token
+    counts follow the paper's per-domain profiles; prompt caching follows
+    the engine's semantics (round r+1 reads the whole prior conversation
+    from cache, pays fresh input only for the reflection suffix).
+    """
+
+    def __init__(self, model_name: str, domain: str, seed: int = 0,
+                 prompt_caching: bool = True):
+        self.model_name = model_name
+        self.domain = domain
+        self.prompt_caching = prompt_caching
+        self.rng = np.random.default_rng(seed)
+        self.profile = QS.TOKEN_PROFILE[domain]
+        self._convo_cached: Dict[str, int] = {}
+
+    def complete(self, conversation_tokens: int, conversation_id: str,
+                 budget: BudgetTier, thinking_tokens: int = 0
+                 ) -> TokenUsage:
+        cached = (self._convo_cached.get(conversation_id, 0)
+                  if self.prompt_caching else 0)
+        cached = min(cached, conversation_tokens)
+        fresh = conversation_tokens - cached
+        out = self.profile["out"] + thinking_tokens
+        usage = TokenUsage(input_tokens=fresh, cache_read_tokens=cached,
+                           cache_write_tokens=fresh, output_tokens=out)
+        self._convo_cached[conversation_id] = conversation_tokens + out
+        return usage
+
+
+class ReflectionController:
+    """Generic reflect-and-revise loop over either backend."""
+
+    def __init__(self, strategy: InferenceStrategy,
+                 feedback: Optional[FeedbackProvider] = None):
+        self.strategy = strategy
+        self.feedback = feedback or NoFeedback()
+
+    # ---------------- real-engine path -----------------------------------
+
+    def run_task(self, backend: EngineBackend, task) -> ReflectionResult:
+        convo = task.prompt()
+        cid = f"task-{id(task)}"
+        result = ReflectionResult(rounds=[])
+        response, usage = backend.complete(convo, cid, self.strategy.budget)
+        rec = RoundRecord(response, usage, correct=bool(task.verify(response)))
+        result.rounds.append(rec)
+        result.usage += usage
+        for _ in range(self.strategy.reflection_rounds):
+            fb = self.feedback.feedback(task, response)
+            convo = (convo + " " + response + " "
+                     + REFLECT_TEMPLATE.format(feedback=fb,
+                                               question=task.prompt()))
+            response, usage = backend.complete(convo, cid, self.strategy.budget)
+            rec = RoundRecord(response, usage,
+                              correct=bool(task.verify(response)))
+            result.rounds.append(rec)
+            result.usage += usage
+        return result
+
+    # ---------------- simulated path (paper reproduction) ----------------
+
+    def run_simulated(self, sim: SimulatedBackend, correct_by_round,
+                      think_tokens: int = 0) -> ReflectionResult:
+        """correct_by_round: bool per round from quality_sim trajectories."""
+        prof = sim.profile
+        convo_tokens = prof["prompt"]
+        cid = f"sim-{sim.rng.integers(1 << 62)}"
+        result = ReflectionResult(rounds=[])
+        usage = sim.complete(convo_tokens, cid, self.strategy.budget,
+                             think_tokens)
+        result.rounds.append(RoundRecord("", usage,
+                                         correct=bool(correct_by_round[0])))
+        result.usage += usage
+        for r in range(self.strategy.reflection_rounds):
+            convo_tokens += prof["out"] + QS.REFLECT_PROMPT_TOKENS \
+                + prof["prompt"]          # response + instruction + re-quote
+            usage = sim.complete(convo_tokens, cid, self.strategy.budget)
+            result.rounds.append(RoundRecord(
+                "", usage, correct=bool(correct_by_round[r + 1])))
+            result.usage += usage
+        return result
+
+
+def evaluate_strategy(model_name: str, domain: str,
+                      strategy: InferenceStrategy, n_examples: int = 100,
+                      seed: int = 0, prompt_caching: bool = True
+                      ) -> Dict[str, float]:
+    """Paper-grid evaluation of one (model, domain, strategy) cell:
+    accuracy from the calibrated simulator + cost/latency from accounting.
+    Returns dict(accuracy, cost_usd, latency_s) of per-example means.
+    """
+    think = 0
+    if strategy.budget is not BudgetTier.NONE:
+        think = QS.THINK_CONSUMED[strategy.budget.value]
+        acc = QS.QUALITY[domain][model_name].get("think", {}).get(
+            strategy.budget.value)
+        if acc is None:
+            acc = QS.accuracy_at(domain, model_name, 0)
+        rounds_correct = None
+    else:
+        traj = QS.simulate_trajectories(domain, model_name, n_examples,
+                                        strategy.reflection_rounds, seed)
+        acc = None
+        rounds_correct = traj.correct
+
+    sim = SimulatedBackend(model_name, domain, seed,
+                           prompt_caching=prompt_caching)
+    cm = CostModel.for_model(model_name)
+    lm = LatencyModel.for_model(model_name)
+    ctrl = ReflectionController(strategy)
+    costs, lats, correct = [], [], []
+    for i in range(n_examples):
+        if rounds_correct is not None:
+            res = ctrl.run_simulated(sim, rounds_correct[i])
+            correct.append(bool(rounds_correct[i][-1]))
+        else:
+            res = ctrl.run_simulated(sim, [True], think_tokens=think)
+        costs.append(cm.cost(res.usage, prompt_caching=prompt_caching))
+        lats.append(lm.latency(res.usage))
+    accuracy = (float(np.mean(correct)) * 100.0
+                if correct else float(acc))
+    return {"accuracy": accuracy, "cost_usd": float(np.mean(costs)),
+            "latency_s": float(np.mean(lats))}

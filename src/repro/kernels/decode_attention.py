@@ -1,0 +1,98 @@
+"""Pallas TPU flash-decode attention: one query token over a KV ring cache.
+
+  q:   [B, K, G, hd]          (single position, grouped-query layout)
+  k,v: [B, C, K, hd]          (ring cache, C slots)
+  tok: [B, C] int32           (absolute token index per slot, -1 = empty)
+  pos: [B] int32              (current position)
+  out: [B, K, G, hd]
+
+Grid (B, K, nc) with the LAST axis sequential (TPU semantics): kv tiles
+stream through VMEM while m/l/acc accumulators persist in scratch across
+the nc iterations; the final iteration writes out.  This is the
+distributed-friendly layout matching the seq-sharded cache of the
+serving dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, tok_ref, pos_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, bk: int, nc: int,
+                   scale: float, window: Optional[int]):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale               # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)                    # [bk, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    tok = tok_ref[0]                                          # [bk]
+    pos = pos_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # [G, bk]
+    valid = (tok >= 0) & (tok <= pos)
+    if window is not None:
+        valid = valid & (tok > pos - window)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(c == nc - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_new / jnp.maximum(l_new, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     tok: jax.Array, pos: jax.Array,
+                     *, window: Optional[int] = None, bk: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """q: [B,K,G,hd]; k/v: [B,C,K,hd]; tok: [B,C]; pos: [B]."""
+    B, K, G, hd = q.shape
+    C = k.shape[1]
+    bk = min(bk, C)
+    assert C % bk == 0, (C, bk)
+    nc = C // bk
+    scale = hd ** -0.5
+    kernel = functools.partial(_decode_kernel, bk=bk, nc=nc, scale=scale,
+                               window=window)
+    pos2 = pos[:, None]                                       # [B,1] for SMEM
+    return pl.pallas_call(
+        kernel,
+        grid=(B, K, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, c: (b, c)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, c: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, tok, pos2)

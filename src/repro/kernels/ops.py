@@ -1,0 +1,47 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (CPU validation mode) and False on
+TPU where the Mosaic pipeline compiles the real kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, window: Optional[int] = None, bq: int = 128,
+                    bk: int = 128, interpret: Optional[bool] = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _flash(q, k, v, window=window, bq=bq, bk=bk, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention(q, k, v, tok, pos, *, window: Optional[int] = None,
+                     bk: int = 128, interpret: Optional[bool] = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _decode(q, k, v, tok, pos, window=window, bk=bk, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def mamba_scan(dt, Bm, Cm, x, A, Dsk, h0, *, bd: int = 256,
+               interpret: Optional[bool] = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _mamba(dt, Bm, Cm, x, A, Dsk, h0, bd=bd, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "interpret"))
+def rglru_scan(a, b, h0, *, bw: int = 512, interpret: Optional[bool] = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _rglru(a, b, h0, bw=bw, interpret=interp)

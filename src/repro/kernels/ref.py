@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, window: Optional[int] = None):
+    """q: [B,H,S,hd]; k/v: [B,K,S,hd] -> [B,H,S,hd] (causal)."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    qf = q.reshape(B, K, G, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qf, kf) * hd ** -0.5
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = j <= i
+    if window is not None:
+        mask = mask & (j > i - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, vf)
+    return o.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, tok, pos, *, window: Optional[int] = None):
+    """q: [B,K,G,hd]; k/v: [B,C,K,hd]; tok: [B,C]; pos: [B]."""
+    B, K, G, hd = q.shape
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32)) * hd ** -0.5
+    valid = (tok >= 0) & (tok <= pos[:, None])
+    if window is not None:
+        valid = valid & (tok > pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def mamba_scan_ref(dt, Bm, Cm, x, A, Dsk, h0):
+    """Sequential reference for the selective scan."""
+    B, S, D = dt.shape
+
+    def step(h, t):
+        a = jnp.exp(dt[:, t, :, None] * A[None])            # [B,D,N]
+        h = a * h + (dt[:, t] * x[:, t].astype(jnp.float32))[..., None] \
+            * Bm[:, t, None, :].astype(jnp.float32)
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, t].astype(jnp.float32))
+        y = y + Dsk[None] * x[:, t].astype(jnp.float32)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return ys.swapaxes(0, 1), h
+
+
+def rglru_scan_ref(a, b, h0):
+    def step(h, t):
+        h = a[:, t] * h + b[:, t]
+        return h, h
+
+    h, hs = jax.lax.scan(step, h0, jnp.arange(a.shape[1]))
+    return hs.swapaxes(0, 1), h

@@ -1,0 +1,321 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+MUST be the very first two lines (jax locks device count on first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (LONG_CONTEXT_WINDOW, SHAPES, ModelConfig,
+                                ShapeConfig, TrainConfig)
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.models import layers as L
+from repro.models.registry import ARCH_IDS, build_model, get_config
+from repro.train import optimizer as OPT
+from repro.train.loop import make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+# Combos skipped by design — see DESIGN.md §Arch-applicability.
+SKIPS = {
+    ("whisper_tiny", "long_500k"): "enc-dec with 1.5k-frame encoder has no "
+                                   "524k-token decode regime",
+}
+
+# Training knobs per arch (gradient accumulation, chunked loss, adafactor,
+# Megatron-SP activations) that make the 256-chip memory budget closeable.
+# microbatch is a multiple of 32 so each (pod,data) shard keeps >=1 row.
+TRAIN_OVERRIDES = {
+    "qwen3_0_6b": dict(microbatch=64, loss_chunk=512),
+    "granite_moe_1b_a400m": dict(microbatch=64, loss_chunk=1024),
+    "recurrentgemma_9b": dict(microbatch=32, loss_chunk=256),
+    "nemotron_4_340b": dict(optimizer="adafactor", microbatch=64, loss_chunk=128),
+    "minitron_4b": dict(microbatch=64, loss_chunk=512),
+    "kimi_k2_1t_a32b": dict(optimizer="adafactor", microbatch=64, loss_chunk=256),
+    "yi_6b": dict(microbatch=64, loss_chunk=512),
+    "internvl2_76b": dict(optimizer="adafactor", microbatch=64, loss_chunk=128),
+    "falcon_mamba_7b": dict(microbatch=32, loss_chunk=512),
+    "whisper_tiny": dict(microbatch=64, loss_chunk=512),
+    # extra pool archs
+    "mixtral_8x7b": dict(optimizer="adafactor", microbatch=64, loss_chunk=512),
+    "llama3_70b": dict(optimizer="adafactor", microbatch=32, loss_chunk=128),
+}
+
+# Model-level overrides applied on top of the shape overrides.
+# Megatron-SP on every decoder-only arch (confirmed per-arch in
+# EXPERIMENTS §Perf: 2-8x flops and 1.3-13x temp reductions; whisper's
+# enc-dec path has no SP hook and is a measured no-op).
+MODEL_OVERRIDES = {
+    a: dict(shard_seq_activations=True) for a in (
+        "qwen3_0_6b", "granite_moe_1b_a400m", "recurrentgemma_9b",
+        "nemotron_4_340b", "minitron_4b", "kimi_k2_1t_a32b", "yi_6b",
+        "internvl2_76b", "falcon_mamba_7b", "mixtral_8x7b", "llama3_70b",
+    )
+}
+
+# FSDP (embed-dim weight sharding over 'data') only where params+optimizer
+# cannot fit model-sharded per chip.  Everything else runs pure TP+DP —
+# §Perf iteration: FSDP on small archs induced contracting-dim activation
+# all-reduces (2.1 TB/dev/step on minitron) for zero memory benefit.
+FSDP_ARCHS = {"nemotron_4_340b", "kimi_k2_1t_a32b", "internvl2_76b",
+              "llama3_70b"}
+
+
+def rules_for(arch: str, kind: str = "train"):
+    from repro.launch.rules import DEFAULT_RULES, decode_rules, tp_rules
+    if arch in FSDP_ARCHS:
+        # decode has no optimizer state: row-parallel layout kills the
+        # per-step FSDP weight gather (§Perf hillclimb #3)
+        return decode_rules() if kind == "decode" else DEFAULT_RULES
+    return tp_rules()
+
+from repro.launch.hlocost import analyze as hlo_analyze
+
+
+def arch_shape_config(arch: str, shape: ShapeConfig) -> ModelConfig:
+    """Apply per-shape overrides (sliding window for long-context decode)."""
+    cfg = get_config(arch)
+    if shape.name == "long_500k" and cfg.arch_type in ("dense", "moe", "vlm"):
+        cfg = cfg.replace(sliding_window=LONG_CONTEXT_WINDOW)
+    if arch in MODEL_OVERRIDES and shape.kind == "train":
+        cfg = cfg.replace(**MODEL_OVERRIDES[arch])
+    return cfg
+
+
+def input_specs(arch: str, shape_name: str, *, for_mesh=None
+                ) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this combo.
+
+    Returns dict with keys: "args" (tuple of abstract values) and
+    "shardings" (matching tree of NamedSharding, if for_mesh is given).
+    """
+    shape = SHAPES[shape_name]
+    cfg = arch_shape_config(arch, shape)
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act_dt = jnp.dtype(cfg.dtype)
+
+    def tok(s):
+        return jax.ShapeDtypeStruct(s, i32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok((B, S)), "labels": tok((B, S))}
+        if cfg.arch_type == "vlm":
+            Pn = cfg.num_patches
+            batch["tokens"] = tok((B, S - Pn))
+            batch["labels"] = tok((B, S - Pn))
+            batch["patch_embeds"] = jax.ShapeDtypeStruct((B, Pn, cfg.d_model), act_dt)
+        if cfg.arch_type == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), act_dt)
+        specs = {"batch": batch}
+    elif shape.kind == "prefill":
+        specs = {"tokens": tok((B, S)), "lengths": tok((B,))}
+        if cfg.arch_type == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), act_dt)
+        if cfg.arch_type == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), act_dt)
+    else:  # decode
+        cache_defs = model.cache_defs(B, S, seq_shard=True)
+        specs = {"cache": L.abstract_params(cache_defs),
+                 "cache_defs": cache_defs,
+                 "tokens": tok((B, 1)), "pos": tok((B,))}
+
+    if for_mesh is not None:
+        specs["_mesh"] = for_mesh
+    return specs
+
+
+def param_stats(cfg: ModelConfig, pdefs) -> Tuple[int, int]:
+    """(total, active) parameter counts; active discounts unused experts."""
+    import numpy as np
+    total = expert = 0
+    for d in L.tree_defs(pdefs):
+        n = int(np.prod(d.shape))
+        total += n
+        if "experts" in d.axes:
+            expert += n
+    if cfg.num_experts and cfg.experts_per_token:
+        frac = cfg.experts_per_token / cfg.num_experts
+        active = total - expert + int(expert * frac)
+    else:
+        active = total
+    return total, active
+
+
+def build_step(arch: str, shape_name: str, mesh) -> Tuple[Any, Tuple, Tuple, Any]:
+    """Returns (jitted_fn, abstract_args, kw, meta)."""
+    shape = SHAPES[shape_name]
+    cfg = arch_shape_config(arch, shape)
+    model = build_model(cfg)
+    pdefs = model.param_defs()
+    params_abs = L.abstract_params(pdefs)
+    rules = rules_for(arch, shape.kind)
+    params_sh = SH.sharding_for_defs(pdefs, mesh, rules)
+    p_total, p_active = param_stats(cfg, pdefs)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(**TRAIN_OVERRIDES.get(arch, {}))
+        step = make_train_step(model, cfg, tcfg)
+        opt_abs = jax.eval_shape(lambda p: OPT.opt_init(p, tcfg), params_abs)
+        opt_sh = SH.opt_state_shardings(opt_abs, pdefs, mesh, tcfg.optimizer, rules)
+        sp = input_specs(arch, shape_name)
+        batch_abs = sp["batch"]
+        batch_sh = jax.tree_util.tree_map(
+            lambda a: SH.batch_sharding_for(mesh, a.shape, rules), batch_abs)
+        fn = jax.jit(step,
+                     in_shardings=(params_sh, opt_sh, batch_sh),
+                     out_shardings=(params_sh, opt_sh, None),
+                     donate_argnums=(0, 1))    # params/opt update in place
+        return fn, (params_abs, opt_abs, batch_abs), {}, dict(cfg=cfg, params_total=p_total, params_active=p_active)
+
+    if shape.kind == "prefill":
+        sp = input_specs(arch, shape_name)
+        B, S = shape.global_batch, shape.seq_len
+
+        kw_names = [k for k in ("patch_embeds", "frames") if k in sp]
+
+        def prefill_step(params, tokens, lengths, *extra):
+            kw = dict(zip(kw_names, extra))
+            return model.prefill(params, tokens, lengths=lengths,
+                                 max_seq=S, **kw)
+
+        args_abs = (params_abs, sp["tokens"], sp["lengths"],
+                    *[sp[k] for k in kw_names])
+        shard_extra = [SH.batch_sharding_for(mesh, sp[k].shape, rules)
+                       for k in kw_names]
+        in_sh = (params_sh,
+                 SH.batch_sharding_for(mesh, sp["tokens"].shape, rules),
+                 SH.batch_sharding_for(mesh, sp["lengths"].shape, rules),
+                 *shard_extra)
+        fn = jax.jit(prefill_step, in_shardings=in_sh, out_shardings=None)
+        return fn, args_abs, {}, dict(cfg=cfg, params_total=p_total, params_active=p_active)
+
+    # decode
+    sp = input_specs(arch, shape_name)
+    cache_abs, cache_defs = sp["cache"], sp["cache_defs"]
+    cache_sh = SH.sharding_for_defs(cache_defs, mesh, rules)
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    args_abs = (params_abs, cache_abs, sp["tokens"], sp["pos"])
+    in_sh = (params_sh, cache_sh,
+             SH.batch_sharding_for(mesh, sp["tokens"].shape, rules),
+             SH.batch_sharding_for(mesh, sp["pos"].shape, rules))
+    fn = jax.jit(serve_step, in_shardings=in_sh,
+                 out_shardings=(None, cache_sh),
+                 donate_argnums=(1,))          # cache ring updates in place
+    return fn, args_abs, {}, dict(cfg=cfg, params_total=p_total, params_active=p_active)
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               verbose: bool = True) -> Optional[Dict]:
+    if (arch, shape_name) in SKIPS:
+        if verbose:
+            print(f"SKIP {arch} x {shape_name}: {SKIPS[(arch, shape_name)]}")
+        return None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args_abs, kw, meta = build_step(arch, shape_name, mesh)
+    with mesh:
+        lowered = fn.lower(*args_abs, **kw)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = hlo_analyze(compiled.as_text())
+
+    chips = mesh_chips(mesh)
+    cfg = meta["cfg"]
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        # per-partition numbers (post-SPMD HLO), trip-count corrected:
+        "flops": hlo["flops"],
+        "bytes_accessed": hlo["bytes"],
+        "collectives": hlo["collectives"],
+        "unparsed_while": hlo["unparsed_while"],
+        # raw XLA numbers for reference (undercount scan bodies):
+        "xla_flops": cost.get("flops", 0.0),
+        "xla_bytes": cost.get("bytes accessed", 0.0),
+        "params_total": meta.get("params_total", 0),
+        "params_active": meta.get("params_active", 0),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+    }
+    if verbose:
+        ma = result["memory"]
+        coll = hlo["collectives"]
+        print(f"OK   {arch} x {shape_name} [{result['mesh']}] "
+              f"compile={t_compile:.1f}s flops/dev={result['flops']:.3e} "
+              f"bytes/dev={result['bytes_accessed']:.3e} "
+              f"args/dev={ma['argument_bytes']/2**30:.2f}GiB "
+              f"temp/dev={ma['temp_bytes']/2**30:.2f}GiB "
+              f"coll={ {k: round(v/2**20,1) for k,v in coll.items() if not k.endswith('_count')} }MiB")
+    return result
+
+
+def save_result(res: Dict) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(
+        ARTIFACT_DIR, f"{res['arch']}__{res['shape']}__{res['mesh'].replace('x','_')}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", choices=["all"] + list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--save", action="store_true", help="write artifact JSON")
+    args = ap.parse_args()
+
+    archs = [a for a in ARCH_IDS if a != "reflect_demo_100m"] \
+        if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    res = dryrun_one(arch, shape, multi_pod=mp)
+                    if res and args.save:
+                        save_result(res)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    failures.append((arch, shape, mp, repr(e)[:400]))
+                    print(f"FAIL {arch} x {shape} multi_pod={mp}: {repr(e)[:400]}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

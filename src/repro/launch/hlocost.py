@@ -1,0 +1,300 @@
+"""Trip-count-aware cost model over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE,
+which silently undercounts a scanned-layers transformer by ~num_layers x.
+This module re-derives flops / HBM bytes / collective bytes by walking the
+HLO computation graph and multiplying while bodies by their parsed trip
+counts — the numbers EXPERIMENTS.md §Roofline is built from.
+
+Model:
+  flops        — 2 * prod(result_dims) * prod(lhs_contracting_dims) per dot
+                 (+ convolution treated as dot-equivalent if present)
+  bytes        — sum of operand + result bytes per materialized instruction
+                 (post-fusion, scheduled HLO: a fair HBM-traffic proxy)
+  collectives  — result bytes per all-reduce/all-gather/reduce-scatter/
+                 all-to-all/collective-permute, multiplied by trips
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+               "u32": 4, "f16": 2, "bf16": 2, "s16": 2, "u16": 2,
+               "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+               "s4": 1, "u4": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*"
+    r"(\((?:[^()]|\([^()]*\))*\)|\w+\[[0-9,]*\](?:\{[^{}]*(?:\{[^{}]*\})?[^{}]*\})?)"
+    r"\s+([\w-]+)\((.*)$")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([^\s(]+)\s*\(.*\)\s*->.*\{\s*$")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLS = re.compile(r"calls=%?([^\s,)]+)")
+_BODY = re.compile(r"body=%?([^\s,)]+)")
+_COND = re.compile(r"condition=%?([^\s,)]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_OPERAND = re.compile(r"%([^\s,()]+)")
+
+# instructions that move no data
+_FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "partition-id", "replica-id", "iota"}
+
+
+def _type_bytes(ty: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(ty):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(ty: str) -> Optional[List[int]]:
+    m = _SHAPE.search(ty)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    tail: str               # operands + attributes
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(2), bool(m.group(1)))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, ty, op, tail = m.groups()
+        ins = Instr(name, ty, op, tail)
+        # operand names = leading %refs before attribute section
+        paren_close = _find_operand_span(tail)
+        ins.operands = _OPERAND.findall(tail[:paren_close])
+        cur.instrs.append(ins)
+        cur.shapes[name] = ty
+    return comps
+
+
+def _find_operand_span(tail: str) -> int:
+    depth = 1
+    for i, ch in enumerate(tail):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(tail)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    unparsed_while: int = 0
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.transcendentals += o.transcendentals
+        for k, v in o.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v
+        self.unparsed_while += o.unparsed_while
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.transcendentals * k,
+                    {a: b * k for a, b in self.collectives.items()},
+                    self.unparsed_while)
+
+
+_LEAD_INT = re.compile(r"^\s*(\d+)\s*\)")
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """Scan lowering: cond compares the induction var LT a constant."""
+    consts = []
+    for ins in cond.instrs:
+        if ins.op == "constant" and "s32" in ins.type_str:
+            # tail looks like "10), metadata=..." (op name consumed the "(")
+            m = _LEAD_INT.match(ins.tail)
+            if m:
+                consts.append(int(m.group(1)))
+        # constants occasionally appear inline in fused compares
+        consts += [int(x) for x in _CONST_INT.findall(ins.tail)]
+    consts = [c for c in consts if c > 0]
+    return max(consts) if consts else None
+
+
+class Analyzer:
+    def __init__(self, comps: Dict[str, Computation]):
+        self.comps = comps
+        self.memo: Dict[str, Cost] = {}
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self.memo:
+            return self.memo[name]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            return total
+        self.memo[name] = total  # guard against cycles
+        for ins in comp.instrs:
+            total += self.instr_cost(comp, ins)
+        return total
+
+    def instr_cost(self, comp: Computation, ins: Instr) -> Cost:
+        c = Cost()
+        op = ins.op
+        if op in _FREE:
+            return c
+        if op == "while":
+            body = _BODY.search(ins.tail)
+            cond = _COND.search(ins.tail)
+            inner = Cost()
+            # primary: XLA's own analysis in backend_config
+            mt = _TRIP_CFG.search(ins.tail)
+            trips = int(mt.group(1)) if mt else None
+            if cond and cond.group(1) in self.comps:
+                if trips is None:
+                    trips = _trip_count(self.comps[cond.group(1)])
+                inner += self.comp_cost(cond.group(1))
+            if body:
+                inner += self.comp_cost(body.group(1))
+            if trips is None:
+                trips = 1
+                c.unparsed_while += 1
+            return c.__iadd__(inner.scaled(trips))
+        if op == "conditional":
+            m = _BRANCHES.search(ins.tail)
+            if m:
+                branches = [b.strip().lstrip("%") for b in m.group(1).split(",")]
+                costs = [self.comp_cost(b) for b in branches if b in self.comps]
+                if costs:
+                    worst = max(costs, key=lambda x: x.flops + x.bytes)
+                    c += worst
+            return c
+        # data movement: result + operands
+        if op == "dynamic-update-slice":
+            # in-place DUS traffic = the updated slice (read+write), not the
+            # full buffer (donated/aliased in production)
+            upd = comp.shapes.get(ins.operands[1]) if len(ins.operands) > 1 else None
+            c.bytes += 2 * _type_bytes(upd) if upd else _type_bytes(ins.type_str)
+            return c
+        if op in ("dynamic-slice", "slice", "gather", "copy", "transpose",
+                  "reshape", "broadcast", "concatenate", "select", "scatter",
+                  "pad", "reverse", "convert"):
+            # reads only what it writes (slice/gather read the selected
+            # window, not the whole operand buffer)
+            c.bytes += 2 * _type_bytes(ins.type_str)
+            return c
+        nbytes = _type_bytes(ins.type_str)
+        for o in ins.operands:
+            ty = comp.shapes.get(o)
+            if ty:
+                nbytes += _type_bytes(ty)
+        c.bytes += nbytes
+        if op in ("fusion", "call", "custom-call"):
+            m = _CALLS.search(ins.tail)
+            if m:
+                sub = self.comp_cost(m.group(1))
+                c.flops += sub.flops
+                c.transcendentals += sub.transcendentals
+                for k, v in sub.collectives.items():
+                    c.collectives[k] = c.collectives.get(k, 0.0) + v
+                # bytes of fused internals don't hit HBM: skip sub.bytes
+            return c
+        if op == "dot":
+            out_dims = _first_shape_dims(ins.type_str) or []
+            flops = 2.0
+            for d in out_dims:
+                flops *= d
+            lhs_ty = comp.shapes.get(ins.operands[0]) if ins.operands else None
+            mcon = _CONTRACT.search(ins.tail)
+            if lhs_ty and mcon and mcon.group(1):
+                lhs_dims = _first_shape_dims(lhs_ty) or []
+                for idx in mcon.group(1).split(","):
+                    i = int(idx)
+                    if i < len(lhs_dims):
+                        flops *= lhs_dims[i]
+            c.flops += flops
+            return c
+        if op == "convolution":
+            # rare in this codebase; approximate via result*2 (underestimate)
+            out_dims = _first_shape_dims(ins.type_str) or []
+            flops = 2.0
+            for d in out_dims:
+                flops *= d
+            c.flops += flops
+            return c
+        if op.startswith(COLLECTIVES) or any(op.startswith(k) for k in COLLECTIVES):
+            kind = next(k for k in COLLECTIVES if op.startswith(k))
+            if op.endswith("-done"):
+                return Cost()  # counted at -start
+            c.collectives[kind] = c.collectives.get(kind, 0.0) + _type_bytes(ins.type_str)
+            c.collectives[kind + "_count"] = c.collectives.get(kind + "_count", 0.0) + 1
+            return c
+        if op in ("exponential", "log", "tanh", "rsqrt", "power"):
+            dims = _first_shape_dims(ins.type_str) or []
+            n = 1.0
+            for d in dims:
+                n *= d
+            c.transcendentals += n
+        return c
+
+
+def analyze(hlo: str) -> Dict:
+    comps = parse_module(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {},
+                "unparsed_while": 0}
+    a = Analyzer(comps)
+    cost = a.comp_cost(entry.name)
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "transcendentals": cost.transcendentals,
+        "collectives": cost.collectives,
+        "unparsed_while": cost.unparsed_while,
+    }

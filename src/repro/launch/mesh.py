@@ -1,0 +1,39 @@
+"""Production mesh definition (TPU v5e).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``xla_force_host_platform_device_count`` before first jax init, and tests
+must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # per chip, FLOP/s
+HBM_BW = 819e9                    # per chip, B/s
+ICI_BW = 50e9                     # per link, B/s
+HBM_BYTES = 16 * 1024 ** 3        # 16 GiB per chip
+
+
+def _auto(n):
+    from jax.sharding import AxisType
+    return (AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh():
+    """1-device mesh for CPU tests/examples (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

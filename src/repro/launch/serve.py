@@ -1,0 +1,57 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [--smoke]``.
+
+Runs a batch of reflection-style requests through the engine and prints
+throughput + prefix-cache statistics.  Full configs serve via the decode
+dry-run; --smoke serves the reduced config live on CPU.
+"""
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="reflect_demo_100m")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--no-prefix-cache", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs.base import ServeConfig
+    from repro.models.registry import build_model, get_smoke_config
+    from repro.serving.engine import Engine
+    from repro.serving.request import Request
+
+    cfg = get_smoke_config(args.arch).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params,
+                    ServeConfig(max_batch=4, max_seq=512, page_size=16,
+                                prefix_cache=not args.no_prefix_cache))
+
+    convos = [[1] + list(range(10 + 7 * i, 30 + 7 * i))
+              for i in range(args.requests)]
+    t0 = time.perf_counter()
+    for rnd in range(args.rounds):
+        reqs = [Request(prompt=list(c), max_new_tokens=args.max_new,
+                        eos_id=None) for c in convos]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        for c, r in zip(convos, reqs):
+            c += r.output + [99, 98]          # reflection suffix
+    dt = time.perf_counter() - t0
+    steps = engine.model_steps
+    print(f"{args.requests} requests x {args.rounds} rounds in {dt:.2f}s")
+    print(f"decode {steps['decode_steps']} tok "
+          f"({steps['decode_steps']/dt:.1f} tok/s), prefill "
+          f"{steps['prefill_tokens']} tok, extend {steps['extend_tokens']} tok")
+    if engine.prefix_cache:
+        print(f"prefix cache: {engine.prefix_cache.stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Logical-axis -> mesh sharding rules with divisibility fallback.
+
+MaxText-style: params/caches declare *logical* axes (embed, ff, heads,
+vocab, experts, batch, kv_seq, ...); this module maps them onto the mesh.
+A rule that does not evenly divide the dim — or whose mesh axis is already
+taken by an earlier dim of the same tensor — is dropped (replication),
+which is what lets minitron's 24 heads and whisper's 6 heads coexist with
+a 16-way model axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.rules import DEFAULT_RULES, spec_for
+from repro.models import layers as L
+
+PyTree = Any
+
+
+def sharding_for_defs(defs: PyTree, mesh: Mesh, rules=None) -> PyTree:
+    """ParamDef tree -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda d: NamedSharding(mesh, spec_for(d.shape, d.axes, mesh, rules)),
+        defs, is_leaf=L.is_def)
+
+
+def abstract_for_defs(defs: PyTree) -> PyTree:
+    return L.abstract_params(defs)
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2, rules=None) -> NamedSharding:
+    """[batch, ...] activations: batch over (pod, data)."""
+    rules = rules or DEFAULT_RULES
+    axes = tuple(m for m in rules["batch"] if m in mesh.axis_names)
+    return NamedSharding(mesh, P(axes, *([None] * (ndim - 1))))
+
+
+def batch_sharding_for(mesh: Mesh, shape: Tuple[int, ...], rules=None
+                       ) -> NamedSharding:
+    """Like batch_sharding but with divisibility fallback on dim 0."""
+    rules = rules or DEFAULT_RULES
+    spec = spec_for(shape, ("batch",) + (None,) * (len(shape) - 1), mesh, rules)
+    return NamedSharding(mesh, spec)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def tree_shardings_for_batch(batch_defs: PyTree, mesh: Mesh, rules=None
+                             ) -> PyTree:
+    return sharding_for_defs(batch_defs, mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state shardings: mirror the param sharding for same-shaped slots
+# ---------------------------------------------------------------------------
+
+def opt_state_shardings(opt_state_shapes: PyTree, param_defs: PyTree,
+                        mesh: Mesh, optimizer: str, rules=None) -> PyTree:
+    """Build shardings for the optimizer state produced by train.optimizer.
+
+    AdamW slots m/v mirror the param layout; Adafactor factored slots
+    inherit the param's logical axes minus the reduced dim.
+    """
+    rules = rules or DEFAULT_RULES
+    pdefs_flat, _ = jax.tree_util.tree_flatten(param_defs, is_leaf=L.is_def)
+
+    def mirror(d: L.ParamDef) -> NamedSharding:
+        return NamedSharding(mesh, spec_for(d.shape, d.axes, mesh, rules))
+
+    if optimizer == "adamw":
+        m = jax.tree_util.tree_map(mirror, param_defs, is_leaf=L.is_def)
+        return {"m": m, "v": m,
+                "step": NamedSharding(mesh, P())}
+
+    # adafactor: vr drops last dim, vc drops second-to-last
+    def fact(d: L.ParamDef):
+        if len(d.shape) >= 2 and d.shape[-1] > 1 and d.shape[-2] > 1:
+            vr = spec_for(d.shape[:-1], d.axes[:-1], mesh, rules)
+            vc = spec_for(d.shape[:-2] + d.shape[-1:],
+                          d.axes[:-2] + d.axes[-1:], mesh, rules)
+            return {"vr": NamedSharding(mesh, vr), "vc": NamedSharding(mesh, vc)}
+        return {"v": NamedSharding(mesh, spec_for(d.shape, d.axes, mesh, rules))}
+
+    slots = jax.tree_util.tree_map(fact, param_defs, is_leaf=L.is_def)
+    return {"slots": slots, "step": NamedSharding(mesh, P())}

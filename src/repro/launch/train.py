@@ -1,0 +1,68 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On this CPU container only --smoke is runnable end-to-end; the full
+configs are exercised via the dry-run (--dryrun prints the production
+plan: mesh, shardings, train overrides).
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="reflect_demo_100m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="train the reduced config on CPU")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--dryrun", action="store_true",
+                    help="print the production plan, do not execute")
+    args = ap.parse_args()
+
+    if args.dryrun:
+        # deferred import: dryrun sets XLA device-count flags
+        from repro.launch.dryrun import TRAIN_OVERRIDES, rules_for
+        from repro.models.registry import get_config
+        cfg = get_config(args.arch)
+        print(f"arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model}")
+        print(f"train overrides: {TRAIN_OVERRIDES.get(args.arch, {})}")
+        print(f"sharding rules: {rules_for(args.arch, 'train')}")
+        print("lower+compile: python -m repro.launch.dryrun "
+              f"--arch {args.arch} --shape train_4k --mesh both")
+        return
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import TrainConfig
+    from repro.data.lm_data import lm_batches
+    from repro.models.registry import (build_model, get_config,
+                                       get_smoke_config)
+    from repro.train import optimizer as opt
+    from repro.train.loop import make_train_step
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainConfig(total_steps=args.steps, warmup_steps=10,
+                       learning_rate=1e-3, remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = opt.opt_init(params, tcfg)
+    step = jax.jit(make_train_step(model, cfg, tcfg))
+    losses = []
+    for i, b in enumerate(lm_batches(args.seq, args.batch, args.steps)):
+        b = {k: jax.numpy.asarray(v) for k, v in b.items()}
+        if cfg.arch_type == "vlm":
+            b["patch_embeds"] = jax.numpy.zeros(
+                (args.batch, cfg.num_patches, cfg.d_model), cfg.dtype)
+        if cfg.arch_type == "audio":
+            b["frames"] = jax.numpy.zeros(
+                (args.batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+        params, state, m = step(params, state, b)
+        losses.append(float(m["loss"]))
+        if i % 10 == 0:
+            print(f"step {i:4d} loss {losses[-1]:.3f}")
+    print(f"final loss {np.mean(losses[-5:]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

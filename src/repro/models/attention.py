@@ -1,0 +1,477 @@
+"""GQA attention blocks: full-sequence (train/prefill) and single-token decode.
+
+KV cache layout per layer: ``{"k": [B, C, K, D], "v": [B, C, K, D],
+"tok": [B, C] int32}`` where ``C`` is the cache capacity (ring buffer when a
+sliding window is active).  ``tok`` stores the absolute token index held in
+each slot (-1 = empty) which makes windowed/ring masking trivial and exact.
+
+The ``impl`` switch selects the XLA einsum path (default; used for training
+and dry-run lowering) or the Pallas TPU kernels in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+NEG_INF = -1e30
+ATTN_CHUNK = 1024          # flash path kicks in above this sequence length
+# §Perf hillclimb #1: iterate only lower-triangular (q-chunk, kv-chunk)
+# pairs for causal attention instead of masking the full nq x nk grid —
+# halves attention FLOPs (the dominant term for small-d archs at 4k+).
+CAUSAL_SKIP = True
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def attn_def(cfg: ModelConfig, dtype) -> Dict:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": L.ParamDef((d, H, hd), ("embed", "heads", None), dtype),
+        "wk": L.ParamDef((d, K, hd), ("embed", "kv_heads", None), dtype),
+        "wv": L.ParamDef((d, K, hd), ("embed", "kv_heads", None), dtype),
+        "wo": L.ParamDef((H, hd, d), ("heads", None, "embed"), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.ParamDef((hd,), (None,), dtype, init="ones")
+        p["k_norm"] = L.ParamDef((hd,), (None,), dtype, init="ones")
+    return p
+
+
+def attn_block_def(cfg: ModelConfig, dtype, window_attn: bool = False) -> Dict:
+    return {
+        "ln1": L.rmsnorm_def(cfg.d_model, dtype),
+        "attn": attn_def(cfg, dtype),
+        "ln2": L.rmsnorm_def(cfg.d_model, dtype),
+        "mlp": L.mlp_def(cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def _qkv(cfg: ModelConfig, p: Dict, x: jax.Array, positions: jax.Array):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = L.rmsnorm_heads(p["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm_heads(p["k_norm"], k, cfg.norm_eps)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _pick_chunk(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (bounded search)."""
+    c = min(S, target)
+    for cand in range(c, 0, -1):
+        if S % cand == 0:
+            return cand
+        if c - cand > 4096:
+            break
+    return S
+
+
+def _flash_attention(cfg: ModelConfig, q, k, v, positions, window,
+                     lengths, prefix_len, dt) -> jax.Array:
+    """Chunked online-softmax attention (XLA flash): bounded working set.
+
+    q: [B,S,K,G,hd]; k/v: [B,S,K,hd].  Sliding windows use a *banded* kv
+    range per query chunk (static band width, dynamic offset), so windowed
+    prefill does O(S * window) work rather than O(S^2).
+    """
+    B, S, K, G, hd = q.shape
+    cq = _pick_chunk(S, ATTN_CHUNK)
+    ck = cq
+    nq = S // cq
+    scale = hd ** -0.5
+    pos = positions  # [Bp, S]
+    Bp = pos.shape[0]
+
+    if window is not None:
+        band = -(-(window + cq - 1) // ck) * ck
+        band = min(band, S)
+        n_inner = band // ck
+    else:
+        n_inner = S // ck
+
+    def one_q_chunk(_, qi):
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * cq, cq, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(pos, qi * cq, cq, axis=1)  # [Bp,cq]
+        if window is not None:
+            kv0 = jnp.clip(qi * cq + cq - band, 0, S - band)
+        else:
+            kv0 = 0
+
+        def inner(carry, j):
+            m, l, acc = carry
+            off = kv0 + j * ck
+            kc = jax.lax.dynamic_slice_in_dim(k, off, ck, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, off, ck, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(pos, off, ck, axis=1)  # [Bp,ck]
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qc, kc).astype(jnp.float32)
+            s = s * scale
+            mask = kp[:, None, :] <= qp[:, :, None]                  # [Bp,cq,ck]
+            if prefix_len:
+                mask = mask | ((qp[:, :, None] < prefix_len)
+                               & (kp[:, None, :] < prefix_len))
+            if window is not None:
+                mask = mask & (kp[:, None, :] > qp[:, :, None] - window)
+            if lengths is not None:
+                mask = mask & (kp[:, None, :] < lengths[:, None, None])
+            s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p_, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p_.astype(dt), vc).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, K, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, K, G, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0),
+                                      jnp.arange(n_inner))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(dt)                                  # [B,K,G,cq,hd]
+
+    _, outs = jax.lax.scan(one_q_chunk, None, jnp.arange(nq))
+    # [nq,B,K,G,cq,hd] -> [B, nq*cq, K, G, hd]
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, K, G, S, hd)
+    return jnp.transpose(out, (0, 3, 1, 2, 4))
+
+
+def _flash_attention_causal_skip(cfg: ModelConfig, q, k, v, positions,
+                                 lengths, prefix_len, dt) -> jax.Array:
+    """Causal flash over ONLY the lower-triangular block pairs.
+
+    One scan over nq(nq+1)/2 (qi, kj) pairs in row-major order; m/l/acc
+    reset at each row start, the finished row is written into the output
+    carry at row end.  Work = (nq+1)/(2*nq) of the masked-full grid.
+    """
+    import numpy as np
+
+    B, S, K, G, hd = q.shape
+    cq = _pick_chunk(S, ATTN_CHUNK)
+    ck = cq
+    nq = S // cq
+    scale = hd ** -0.5
+    pos = positions
+    pairs = [(qi, kj) for qi in range(nq) for kj in range(qi + 1)]
+    qi_arr = jnp.asarray(np.array([p_[0] for p_ in pairs], np.int32))
+    kj_arr = jnp.asarray(np.array([p_[1] for p_ in pairs], np.int32))
+    row_start = jnp.asarray(np.array([p_[1] == 0 for p_ in pairs], np.bool_))
+    row_end = jnp.asarray(np.array([p_[0] == p_[1] for p_ in pairs], np.bool_))
+
+    def body(carry, xs):
+        m, l, acc, out = carry
+        qi, kj, rs, re = xs
+        m = jnp.where(rs, jnp.full_like(m, NEG_INF), m)
+        l = jnp.where(rs, jnp.zeros_like(l), l)
+        acc = jnp.where(rs, jnp.zeros_like(acc), acc)
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * cq, cq, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(pos, qi * cq, cq, axis=1)
+        kc = jax.lax.dynamic_slice_in_dim(k, kj * ck, ck, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, kj * ck, ck, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(pos, kj * ck, ck, axis=1)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qc, kc).astype(jnp.float32) * scale
+        mask = kp[:, None, :] <= qp[:, :, None]
+        if prefix_len:
+            mask = mask | ((qp[:, :, None] < prefix_len)
+                           & (kp[:, None, :] < prefix_len))
+        if lengths is not None:
+            mask = mask & (kp[:, None, :] < lengths[:, None, None])
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p_ = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p_, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqt,btkd->bkgqd", p_.astype(dt), vc).astype(jnp.float32)
+        res = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(dt)
+        out = jax.lax.cond(
+            re,
+            lambda o: jax.lax.dynamic_update_slice_in_dim(
+                o, res[None], qi, axis=0),
+            lambda o: o, out)
+        return (m_new, l, acc, out), None
+
+    m0 = jnp.full((B, K, G, cq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, cq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, cq, hd), jnp.float32)
+    o0 = jnp.zeros((nq, B, K, G, cq, hd), dt)
+    (_, _, _, out), _ = jax.lax.scan(
+        body, (m0, l0, a0, o0), (qi_arr, kj_arr, row_start, row_end))
+    out = jnp.moveaxis(out, 0, 3).reshape(B, K, G, S, hd)
+    return jnp.transpose(out, (0, 3, 1, 2, 4))
+
+
+def attention_full_qkv(cfg: ModelConfig, p: Dict, q, k, v,
+                       positions: jax.Array, window: Optional[int],
+                       lengths: Optional[jax.Array] = None,
+                       prefix_len: int = 0,
+                       out_dtype=None) -> jax.Array:
+    """Causal (optionally sliding-window) attention given projected q/k/v.
+
+    ``prefix_len`` marks a bidirectional prefix (VLM image patches attend
+    among themselves); tokens after the prefix remain causal.  Sequences
+    longer than ATTN_CHUNK take the chunked flash path (bounded memory);
+    pure-causal flash additionally skips above-diagonal blocks when
+    CAUSAL_SKIP is on (§Perf hillclimb #1).
+    """
+    B, S = q.shape[0], q.shape[1]
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    dt = out_dtype or q.dtype
+    q = q.reshape(B, S, K, G, hd)
+    if S > ATTN_CHUNK:
+        pos2 = positions if positions.ndim == 2 else positions[None, :]
+        cq = _pick_chunk(S, ATTN_CHUNK)
+        if CAUSAL_SKIP and window is None and prefix_len <= cq:
+            ctx = _flash_attention_causal_skip(cfg, q, k, v, pos2, lengths,
+                                               prefix_len, dt)
+        else:
+            ctx = _flash_attention(cfg, q, k, v, pos2, window, lengths,
+                                   prefix_len, dt)
+        out = ctx.reshape(B, S, H, hd)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+
+    i = positions[:, :, None] if positions.ndim == 2 else positions[None, :, None]
+    j = positions[:, None, :] if positions.ndim == 2 else positions[None, None, :]
+    mask = j <= i                                     # causal
+    if prefix_len:
+        both_prefix = (i < prefix_len) & (j < prefix_len)
+        mask = mask | both_prefix                     # bidirectional prefix
+    if window is not None:
+        mask = mask & (j > i - window)
+    if lengths is not None:
+        mask = mask & (j < lengths[:, None, None])
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    prob = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = jnp.einsum("bkgst,btkd->bskgd", prob, v).reshape(B, S, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def attention_full(cfg: ModelConfig, p: Dict, x: jax.Array,
+                   positions: jax.Array, window: Optional[int],
+                   lengths: Optional[jax.Array] = None,
+                   prefix_len: int = 0) -> jax.Array:
+    q, k, v = _qkv(cfg, p, x, positions)
+    return attention_full_qkv(cfg, p, q, k, v, positions, window,
+                              lengths, prefix_len, out_dtype=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def kv_cache_def(cfg: ModelConfig, batch: int, capacity: int, dtype,
+                 seq_shard: bool = True) -> Dict:
+    """ShapeDtypeStruct-compatible cache spec for one attention layer.
+
+    The capacity dim carries the ``kv_seq`` logical axis: GQA kv_heads
+    (typically 8) cannot divide a 16-way model axis, so the cache is
+    sharded along *sequence* instead (flash-decoding layout; partial
+    softmax combines become collectives).  For batch-1 long-context
+    decode the same axis picks up the (pod, data) axes too.
+    """
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    seq_ax = "kv_seq" if seq_shard else None
+    return {
+        "k": L.ParamDef((batch, capacity, K, hd), ("batch", seq_ax, "kv_heads", None), dtype, init="zeros"),
+        "v": L.ParamDef((batch, capacity, K, hd), ("batch", seq_ax, "kv_heads", None), dtype, init="zeros"),
+        "tok": L.ParamDef((batch, capacity), ("batch", seq_ax), jnp.int32, init="zeros"),
+    }
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> Dict:
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, capacity, K, hd), dtype),
+        "v": jnp.zeros((batch, capacity, K, hd), dtype),
+        "tok": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def prefill_into_cache(cache: Dict, k: jax.Array, v: jax.Array,
+                       lengths: jax.Array) -> Dict:
+    """Write a full prefill's K/V into the (ring) cache.
+
+    Tokens with index >= length are left unwritten (tok=-1).  When S exceeds
+    capacity, only the last ``capacity`` tokens of each sequence survive —
+    exactly the sliding-window semantics.
+    """
+    B, S = k.shape[0], k.shape[1]
+    C = cache["k"].shape[1]
+    t = jnp.arange(S)[None, :]                                    # [1,S]
+    valid = t < lengths[:, None]
+    # Keep only tokens in the final window [length-C, length).
+    keep = valid & (t >= lengths[:, None] - C)
+    slot = t % C
+    b = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+    slot_b = jnp.broadcast_to(slot, (B, S))
+    # Route dropped tokens to a scratch slot (C) and slice it off.
+    slot_safe = jnp.where(keep, slot_b, C)
+    k_new = jnp.zeros_like(cache["k"], shape=(B, C + 1) + cache["k"].shape[2:])
+    v_new = jnp.zeros_like(k_new)
+    tok_new = jnp.full((B, C + 1), -1, jnp.int32)
+    k_new = k_new.at[b, slot_safe].set(k.astype(cache["k"].dtype))
+    v_new = v_new.at[b, slot_safe].set(v.astype(cache["v"].dtype))
+    tok_new = tok_new.at[b, slot_safe].set(jnp.where(keep, t, -1))
+    return {"k": k_new[:, :C], "v": v_new[:, :C], "tok": tok_new[:, :C]}
+
+
+def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
+                     pos: jax.Array, window: Optional[int]) -> Tuple[jax.Array, Dict]:
+    """One-token decode.  x: [B, 1, d]; pos: [B] absolute positions."""
+    B = x.shape[0]
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    C = cache["k"].shape[1]
+    q, k, v = _qkv(cfg, p, x, pos[:, None])
+    # Write the current token into the ring via a masked select rather
+    # than a scatter: scatters onto the kv_seq-SHARDED capacity dim force
+    # GSPMD to all-gather the cache per layer (§Perf hillclimb #3 — this
+    # select is elementwise, so every shard updates locally).
+    slot = pos % C
+    hit = jnp.arange(C)[None, :] == slot[:, None]              # [B, C]
+    cache = {
+        "k": jnp.where(hit[:, :, None, None],
+                       k[:, 0:1].astype(cache["k"].dtype), cache["k"]),
+        "v": jnp.where(hit[:, :, None, None],
+                       v[:, 0:1].astype(cache["v"].dtype), cache["v"]),
+        "tok": jnp.where(hit, pos[:, None], cache["tok"]),
+    }
+    q = q.reshape(B, K, G, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bkgd,btkd->bkgt", q, cache["k"].astype(x.dtype)) * scale
+    scores = scores.astype(jnp.float32)
+    tok = cache["tok"]
+    valid = (tok >= 0) & (tok <= pos[:, None])
+    if window is not None:
+        valid = valid & (tok > pos[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    prob = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", prob, cache["v"].astype(x.dtype))
+    out = out.reshape(B, 1, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Residual blocks (attn mixer + MLP)
+# ---------------------------------------------------------------------------
+
+def block_window(cfg: ModelConfig, kind: str) -> Optional[int]:
+    if kind == "rg_attn":
+        return cfg.local_window
+    return cfg.sliding_window
+
+
+def attn_block_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
+                       positions: jax.Array, kind: str = "attn",
+                       lengths: Optional[jax.Array] = None,
+                       prefix_len: int = 0) -> jax.Array:
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    x = x + attention_full(cfg, p["attn"], h, positions,
+                           block_window(cfg, kind), lengths, prefix_len)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, cfg.mlp_act)
+
+
+def attn_block_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
+                       positions: jax.Array, lengths: jax.Array,
+                       capacity: int, kind: str = "attn",
+                       prefix_len: int = 0) -> Tuple[jax.Array, Dict]:
+    """Full-seq forward that also returns the primed decode cache."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = _qkv(cfg, p["attn"], h, positions)
+    cache = init_kv_cache(cfg, x.shape[0], capacity, x.dtype)
+    cache = prefill_into_cache(cache, k, v, lengths)
+    x = x + attention_full_qkv(cfg, p["attn"], q, k, v, positions,
+                               block_window(cfg, kind), lengths, prefix_len,
+                               out_dtype=x.dtype)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, cfg.mlp_act), cache
+
+
+def attn_block_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
+                      pos: jax.Array, kind: str = "attn") -> Tuple[jax.Array, Dict]:
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    y, cache = attention_decode(cfg, p["attn"], h, cache, pos,
+                                block_window(cfg, kind))
+    x = x + y
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, cfg.mlp_act), cache
+
+
+# ---------------------------------------------------------------------------
+# Prefix-extension (prompt caching): prefill a SUFFIX on top of a cache
+# ---------------------------------------------------------------------------
+
+def attention_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
+                     pos0: jax.Array, window: Optional[int]
+                     ) -> Tuple[jax.Array, Dict]:
+    """Multi-token extension: x: [B, Sx, d] continues at position pos0 [B].
+
+    Writes the suffix K/V into the cache then attends over the whole cache
+    (cached prefix + suffix) with exact token-index masking.  This is the
+    mechanism behind reflection-round prompt caching: round r+1 re-pays
+    prefill only for its suffix.
+    """
+    B, Sx, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    C = cache["k"].shape[1]
+    positions = pos0[:, None] + jnp.arange(Sx)[None, :]            # [B,Sx]
+    q, k, v = _qkv(cfg, p, x, positions)
+    slots = positions % C                                           # [B,Sx]
+    b = jnp.broadcast_to(jnp.arange(B)[:, None], (B, Sx))
+    cache = {
+        "k": cache["k"].at[b, slots].set(k.astype(cache["k"].dtype)),
+        "v": cache["v"].at[b, slots].set(v.astype(cache["v"].dtype)),
+        "tok": cache["tok"].at[b, slots].set(positions),
+    }
+    q = q.reshape(B, Sx, K, G, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", q,
+                        cache["k"].astype(x.dtype)) * scale
+    scores = scores.astype(jnp.float32)
+    tok = cache["tok"]                                              # [B,C]
+    valid = (tok[:, None, :] >= 0) & (tok[:, None, :] <= positions[:, :, None])
+    if window is not None:
+        valid = valid & (tok[:, None, :] > positions[:, :, None] - window)
+    scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
+    prob = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", prob,
+                     cache["v"].astype(x.dtype)).reshape(B, Sx, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, cache
+
+
+def attn_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
+                      pos0: jax.Array, kind: str = "attn"
+                      ) -> Tuple[jax.Array, Dict]:
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    y, cache = attention_extend(cfg, p["attn"], h, cache, pos0,
+                                block_window(cfg, kind))
+    x = x + y
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, cfg.mlp_act), cache

@@ -1,0 +1,207 @@
+"""Mamba-1 selective-state-space block (falcon-mamba-7b family).
+
+Attention-free: the mixer is a depthwise causal conv + selective scan.
+Training/prefill uses a time-chunked associative scan (keeps the
+[B, chunk, d_inner, state] working set bounded); decode is a single
+recurrence step with an O(1) cache {conv tail, ssm state}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+SCAN_CHUNK = 128
+
+
+def mamba_block_def(cfg: ModelConfig, dtype) -> Dict:
+    d, di, st, dtr, ck = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                          cfg.dt_rank, cfg.ssm_conv)
+    import math
+    dt_bias_init = math.log(math.expm1(0.01))   # softplus^-1(0.01)
+    return {
+        "ln": L.rmsnorm_def(d, dtype),
+        "in_proj": L.ParamDef((d, 2 * di), ("embed", "ff"), dtype),
+        "conv_w": L.ParamDef((ck, di), (None, "ff"), dtype, scale=0.5),
+        "conv_b": L.ParamDef((di,), ("ff",), dtype, init="zeros"),
+        "x_proj": L.ParamDef((di, dtr + 2 * st), ("ff", None), dtype),
+        "dt_proj": L.ParamDef((dtr, di), (None, "ff"), dtype),
+        "dt_bias": L.ParamDef((di,), ("ff",), dtype, init="const",
+                              scale=dt_bias_init),
+        "A_log": L.ParamDef((di, st), ("ff", None), jnp.float32, init="const",
+                            scale=0.0),   # A = -exp(0) = -1 baseline
+        "D": L.ParamDef((di,), ("ff",), jnp.float32, init="ones"),
+        "out_proj": L.ParamDef((di, d), ("ff", "embed"), dtype),
+    }
+
+
+def _causal_conv(cfg: ModelConfig, p: Dict, x: jax.Array,
+                 init_state: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv1d.  x: [B, S, di]."""
+    ck = cfg.ssm_conv
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], ck - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                 # [B, S+ck-1, di]
+    w = p["conv_w"].astype(x.dtype)                        # [ck, di]
+    y = sum(xp[:, j:j + x.shape[1]] * w[j] for j in range(ck))
+    return jax.nn.silu(y + p["conv_b"].astype(x.dtype))
+
+
+def _ssm_params(cfg: ModelConfig, p: Dict, xc: jax.Array):
+    """Input-dependent dt/B/C.  xc: [B, S, di] (post-conv)."""
+    dtr, st = cfg.dt_rank, cfg.ssm_state
+    proj = jnp.einsum("bsd,dk->bsk", xc, p["x_proj"].astype(xc.dtype))
+    dt_raw, Bmat, Cmat = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt_raw, p["dt_proj"].astype(xc.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])                               # [di, st]
+    a = jnp.exp(dt[..., None] * A)                         # [B,S,di,st]
+    b = (dt[..., None] * Bmat[:, :, None, :].astype(jnp.float32)
+         * xc[..., None].astype(jnp.float32))              # [B,S,di,st]
+    return a, b, Cmat
+
+
+def _chunked_scan(a: jax.Array, b: jax.Array, h0: jax.Array):
+    """h_t = a_t * h_{t-1} + b_t along axis 1, chunked.  Returns (hs, h_last)."""
+    B, S = a.shape[0], a.shape[1]
+    chunk = min(SCAN_CHUNK, S)
+    if S % chunk:
+        chunk = S  # fall back to one chunk for odd sizes (tests)
+    nc = S // chunk
+    a_c = a.reshape(B, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+    b_c = b.reshape(B, nc, chunk, *b.shape[2:]).swapaxes(0, 1)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def step(h, ab):
+        ac, bc = ab                                        # [B, chunk, ...]
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = aa * h[:, None] + bb                          # inject carry
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(step, h0, (a_c, b_c))
+    hs = hs.swapaxes(0, 1).reshape(B, S, *a.shape[2:])
+    return hs, h_last
+
+
+def _selective_scan(cfg: ModelConfig, p: Dict, xc: jax.Array, h0=None):
+    """Chunked selective scan: the [B,chunk,d_inner,state] working set is
+    materialized one time-chunk at a time (dt/B/C projections happen
+    *inside* the chunk loop).  Returns (y [B,S,di] f32, h_last)."""
+    B, S, di = xc.shape
+    chunk = min(SCAN_CHUNK, S)
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+    xcc = xc.reshape(B, nc, chunk, di).swapaxes(0, 1)      # [nc,B,chunk,di]
+
+    def combine(u, w):
+        a1, b1 = u
+        a2, b2 = w
+        return a1 * a2, a2 * b1 + b2
+
+    def step(h, xck):
+        a, b, Cmat = _ssm_params(cfg, p, xck)              # [B,chunk,di,st]
+        aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = aa * h[:, None] + bb
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cmat.astype(jnp.float32))
+        return hs[:, -1], y
+
+    if h0 is None:
+        h0 = jnp.zeros((B, di, cfg.ssm_state), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, xcc)
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    return y, h_last
+
+
+def mamba_mixer(cfg: ModelConfig, p: Dict, x: jax.Array,
+                return_state: bool = False, init_state: Dict = None):
+    """x: [B, S, d] -> y: [B, S, d] (+ final {conv, h} state)."""
+    dt_ = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    xb, z = jnp.split(xz, 2, axis=-1)                      # [B,S,di] each
+    conv0 = init_state["conv"] if init_state is not None else None
+    h0 = init_state["h"] if init_state is not None else None
+    xc = _causal_conv(cfg, p, xb, conv0)
+    y, h_last = _selective_scan(cfg, p, xc, h0)
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(dt_) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(dt_))
+    if return_state:
+        ck = cfg.ssm_conv
+        hist = xb if conv0 is None else jnp.concatenate(
+            [conv0.astype(dt_), xb], axis=1)
+        if ck > 1:
+            npad = max(0, (ck - 1) - hist.shape[1])
+            conv_tail = hist[:, -(ck - 1):]
+            if npad:
+                conv_tail = jnp.concatenate(
+                    [jnp.zeros((x.shape[0], npad, cfg.d_inner), dt_), conv_tail],
+                    axis=1)
+        else:
+            conv_tail = jnp.zeros((x.shape[0], 0, cfg.d_inner), dt_)
+        return out, {"conv": conv_tail, "h": h_last}
+    return out
+
+
+def mamba_cache_def(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    di, st, ck = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": L.ParamDef((batch, ck - 1, di), ("batch", None, "ff"), dtype,
+                           init="zeros"),
+        "h": L.ParamDef((batch, di, st), ("batch", "ff", None), jnp.float32,
+                        init="zeros"),
+    }
+
+
+def mamba_mixer_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict
+                       ) -> Tuple[jax.Array, Dict]:
+    """One-token step.  x: [B, 1, d]."""
+    dt_ = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    xb, z = jnp.split(xz, 2, axis=-1)                      # [B,1,di]
+    ck = cfg.ssm_conv
+    conv_in = jnp.concatenate([cache["conv"].astype(dt_), xb], axis=1)  # [B,ck,di]
+    w = p["conv_w"].astype(dt_)
+    yc = sum(conv_in[:, j] * w[j] for j in range(ck))      # [B,di]
+    xc = jax.nn.silu(yc + p["conv_b"].astype(dt_))[:, None]  # [B,1,di]
+    a, b, Cmat = _ssm_params(cfg, p, xc)
+    h = a[:, 0] * cache["h"] + b[:, 0]                     # [B,di,st]
+    y = jnp.einsum("bdn,bn->bd", h, Cmat[:, 0].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * xc[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(dt_)) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(dt_))
+    new_cache = {"conv": conv_in[:, 1:].astype(cache["conv"].dtype), "h": h}
+    return out, new_cache
+
+
+def mamba_block_forward(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    return x + mamba_mixer(cfg, p, L.rmsnorm(p["ln"], x, cfg.norm_eps))
+
+
+def mamba_block_prefill(cfg: ModelConfig, p: Dict, x: jax.Array):
+    y, state = mamba_mixer(cfg, p, L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                           return_state=True)
+    return x + y, state
+
+
+def mamba_block_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict):
+    y, cache = mamba_mixer_decode(cfg, p, L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                                  cache)
+    return x + y, cache
+
+
+def mamba_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict):
+    """Continue the recurrence from a cached state over a token suffix."""
+    y, state = mamba_mixer(cfg, p, L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                           return_state=True, init_state=cache)
+    return x + y, state

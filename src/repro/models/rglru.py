@@ -1,0 +1,149 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block = [RMSNorm -> dual linear branches -> causal conv (x-branch) ->
+RG-LRU recurrence -> gated merge -> out-proj] + MLP sub-block.
+The 1:2 local-attention:recurrent interleave is handled by the block
+pattern in the transformer ("rg_attn" blocks reuse the attention module
+with ``local_window``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.mamba import _chunked_scan
+
+RG_C = 8.0
+CONV_K = 4
+
+
+def rglru_block_def(cfg: ModelConfig, dtype) -> Dict:
+    d, w = cfg.d_model, cfg.lru_width
+    # Lambda init so that a = exp(-c*softplus(L)) lands in (0.9, 0.999).
+    lam_init = math.log(math.expm1(-math.log(0.97) / RG_C))
+    return {
+        "ln": L.rmsnorm_def(d, dtype),
+        "in_x": L.ParamDef((d, w), ("embed", "ff"), dtype),
+        "in_y": L.ParamDef((d, w), ("embed", "ff"), dtype),
+        "conv_w": L.ParamDef((CONV_K, w), (None, "ff"), dtype, scale=0.5),
+        "conv_b": L.ParamDef((w,), ("ff",), dtype, init="zeros"),
+        "w_input_gate": L.ParamDef((w, w), ("ff", None), dtype, scale=0.5),
+        "w_rec_gate": L.ParamDef((w, w), ("ff", None), dtype, scale=0.5),
+        "lam": L.ParamDef((w,), ("ff",), jnp.float32, init="const",
+                          scale=lam_init),
+        "out": L.ParamDef((w, d), ("ff", "embed"), dtype),
+        "ln2": L.rmsnorm_def(d, dtype),
+        "mlp": L.mlp_def(d, cfg.d_ff, cfg.mlp_act, dtype),
+    }
+
+
+def _conv(p, x, init_state=None):
+    ck = CONV_K
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], ck - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    return sum(xp[:, j:j + x.shape[1]] * w[j] for j in range(ck)) \
+        + p["conv_b"].astype(x.dtype)
+
+
+def _rg_gates(p, xc):
+    """a_t (log-space) and gated input for the recurrence."""
+    xf = xc.astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(jnp.einsum(
+        "bsw,wv->bsv", xf, p["w_input_gate"].astype(jnp.float32)))
+    r_gate = jax.nn.sigmoid(jnp.einsum(
+        "bsw,wv->bsv", xf, p["w_rec_gate"].astype(jnp.float32)))
+    log_a = -RG_C * jax.nn.softplus(p["lam"]) * r_gate     # [B,S,w]
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via log
+    b_scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = b_scale * i_gate * xf
+    return a, b
+
+
+def rglru_mixer(cfg: ModelConfig, p: Dict, x: jax.Array,
+                return_state: bool = False, init_state: Dict = None):
+    dt_ = x.dtype
+    xb = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(dt_))
+    yb = jnp.einsum("bsd,dw->bsw", x, p["in_y"].astype(dt_))
+    conv0 = init_state["conv"] if init_state is not None else None
+    xc = _conv(p, xb, conv0)
+    a, b = _rg_gates(p, xc)
+    h0 = (init_state["h"] if init_state is not None
+          else jnp.zeros((x.shape[0], cfg.lru_width), jnp.float32))
+    hs, h_last = _chunked_scan(a, b, h0)
+    y = hs.astype(dt_) * jax.nn.gelu(yb)
+    out = jnp.einsum("bsw,wd->bsd", y, p["out"].astype(dt_))
+    if return_state:
+        hist = xb if conv0 is None else jnp.concatenate(
+            [conv0.astype(dt_), xb], axis=1)
+        npad = max(0, (CONV_K - 1) - hist.shape[1])
+        tail = hist[:, -(CONV_K - 1):]
+        if npad:
+            tail = jnp.concatenate(
+                [jnp.zeros((x.shape[0], npad, cfg.lru_width), dt_), tail], axis=1)
+        return out, {"conv": tail, "h": h_last}
+    return out
+
+
+def rglru_cache_def(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    w = cfg.lru_width
+    return {
+        "conv": L.ParamDef((batch, CONV_K - 1, w), ("batch", None, "ff"),
+                           dtype, init="zeros"),
+        "h": L.ParamDef((batch, w), ("batch", "ff"), jnp.float32, init="zeros"),
+    }
+
+
+def rglru_mixer_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict
+                       ) -> Tuple[jax.Array, Dict]:
+    dt_ = x.dtype
+    xb = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(dt_))   # [B,1,w]
+    yb = jnp.einsum("bsd,dw->bsw", x, p["in_y"].astype(dt_))
+    conv_in = jnp.concatenate([cache["conv"].astype(dt_), xb], axis=1)
+    w = p["conv_w"].astype(dt_)
+    xc = sum(conv_in[:, j] * w[j] for j in range(CONV_K)) \
+        + p["conv_b"].astype(dt_)                              # [B,w]
+    a, b = _rg_gates(p, xc[:, None])
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = h[:, None].astype(dt_) * jax.nn.gelu(yb)
+    out = jnp.einsum("bsw,wd->bsd", y, p["out"].astype(dt_))
+    return out, {"conv": conv_in[:, 1:].astype(cache["conv"].dtype), "h": h}
+
+
+def rglru_block_forward(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    x = x + rglru_mixer(cfg, p, L.rmsnorm(p["ln"], x, cfg.norm_eps))
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, cfg.mlp_act)
+
+
+def rglru_block_prefill(cfg: ModelConfig, p: Dict, x: jax.Array):
+    y, state = rglru_mixer(cfg, p, L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                           return_state=True)
+    x = x + y
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, cfg.mlp_act), state
+
+
+def rglru_block_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict):
+    y, cache = rglru_mixer_decode(cfg, p, L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                                  cache)
+    x = x + y
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, cfg.mlp_act), cache
+
+
+def rglru_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict):
+    y, state = rglru_mixer(cfg, p, L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                           return_state=True, init_state=cache)
+    x = x + y
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, cfg.mlp_act), state

@@ -1,0 +1,39 @@
+"""VLM language backbone (InternVL2-76B family, arXiv:2404.16821).
+
+The InternViT vision encoder + MLP projector are a STUB per the assignment
+carve-out: ``input_specs`` supplies projected patch embeddings
+[B, num_patches, d_model].  The backbone is the InternLM2-style dense
+decoder; patches form a bidirectional prefix, text is causal over both.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import TransformerLM
+
+PyTree = Any
+
+
+class VLMModel(TransformerLM):
+    """TransformerLM that consumes a patch-embedding prefix."""
+
+    def forward(self, params: PyTree, batch: Dict, remat: bool = False,
+                prefix_embeds: Optional[jax.Array] = None,
+                return_hidden: bool = False) -> Tuple[jax.Array, jax.Array]:
+        return super().forward(params, batch, remat,
+                               prefix_embeds=batch.get("patch_embeds"),
+                               return_hidden=return_hidden)
+
+    def prefill(self, params: PyTree, tokens: jax.Array,
+                lengths: Optional[jax.Array] = None,
+                max_seq: Optional[int] = None,
+                patch_embeds: Optional[jax.Array] = None,
+                **kw) -> Tuple[jax.Array, PyTree]:
+        return super().prefill(params, tokens, lengths, max_seq,
+                               prefix_embeds=patch_embeds)
+
+    # decode_step inherits unchanged: patches live in the KV cache already.

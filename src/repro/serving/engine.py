@@ -1,0 +1,216 @@
+"""Reflection-aware continuous-batching inference engine.
+
+The paper's three levers are first-class here:
+  * reflection rounds — requests re-enter the scheduler per round with the
+    same conversation_id; prefix caching makes each round's prefill cost
+    proportional to its suffix (Appendix B.4);
+  * prompt caching — serving/prefix_cache.py snapshots the per-layer
+    decode cache at round completion;
+  * budget tuning — BudgetTier caps decode steps (thinking budgets).
+
+Decode runs continuously batched across slots; prefill/extension run
+per-request (CPU demo scale; production would chunk prefills into the
+decode batch).  Per-request token accounting is Bedrock-compatible so the
+paper's cost analysis reproduces.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import layers as L
+from repro.serving import sampler
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.request import BudgetTier, Request, Status, TokenUsage
+
+PyTree = Any
+
+PREFILL_BUCKET = 16
+RECURRENT_KINDS = {"mamba", "rglru"}
+
+
+class Engine:
+    def __init__(self, model, params: PyTree, scfg: ServeConfig):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.params = params
+        self.scfg = scfg
+        B, S = scfg.max_batch, scfg.max_seq
+
+        kinds = set(getattr(model, "unit", ())) | set(getattr(model, "tail", ()))
+        recurrent = bool(kinds & RECURRENT_KINDS)
+        self.prefix_cache = (PrefixCache(scfg.page_size, recurrent=recurrent)
+                             if scfg.prefix_cache else None)
+        # Recurrent states summarize EVERY processed token, so padded
+        # prefill would bake pad tokens into the state snapshot — those
+        # models prefill at exact length (one compile per length).
+        self.prefill_bucket = 1 if recurrent else PREFILL_BUCKET
+
+        # batched decode cache (tok slots start empty = -1)
+        defs = model.cache_defs(B, S, seq_shard=False)
+        self.cache_defs = defs
+        cache = L.init_params(defs, jax.random.PRNGKey(0))
+        self.cache = jax.tree_util.tree_map_with_path(
+            lambda path, x: (jnp.full_like(x, -1)
+                             if any(getattr(k, "key", None) == "tok"
+                                    for k in path) else x), cache)
+
+        self.slots: List[Optional[Request]] = [None] * B
+        self.pos = np.zeros(B, np.int64)
+        self.next_token = np.zeros(B, np.int64)
+        self.queue: deque[Request] = deque()
+        self.rng = jax.random.PRNGKey(scfg.seed)
+        self.model_steps = {"prefill_tokens": 0, "extend_tokens": 0,
+                            "decode_steps": 0, "decode_batch_steps": 0}
+
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, t, l: model.prefill(p, t, lengths=l, max_seq=S))
+        self._extend = jax.jit(model.prefill_extend, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, req: Request) -> int:
+        self.queue.append(req)
+        return req.uid
+
+    def run(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if not self.step():
+                break
+
+    # ----------------------------------------------------------- internals
+
+    def _budget_cap(self, req: Request) -> int:
+        caps = {BudgetTier.NONE: req.max_new_tokens,
+                BudgetTier.LOW: self.scfg.max_think_tokens_low,
+                BudgetTier.HIGH: self.scfg.max_think_tokens_high}
+        return min(req.max_new_tokens, caps[req.budget])
+
+    def _slot_cache(self, slot: int) -> PyTree:
+        """Slice one request's cache (batch axis position varies per leaf:
+        scan-stacked caches are [layers, B, ...], tail caches [B, ...])."""
+
+        def take(x, d):
+            ax = d.axes.index("batch")
+            return jax.lax.slice_in_dim(x, slot, slot + 1, axis=ax)
+
+        return jax.tree_util.tree_map(take, self.cache, self.cache_defs)
+
+    def _set_slot_cache(self, slot: int, c1: PyTree) -> None:
+        def put(full, one, d):
+            ax = d.axes.index("batch")
+            idx = tuple(slice(None) for _ in range(ax)) + (slot,)
+            return full.at[idx].set(jnp.squeeze(one, axis=ax))
+
+        self.cache = jax.tree_util.tree_map(put, self.cache, c1,
+                                            self.cache_defs)
+
+    def _start(self, req: Request, slot: int) -> None:
+        prompt = req.prompt
+        assert len(prompt) + self._budget_cap(req) < self.scfg.max_seq, \
+            "request would overflow max_seq"
+        cached_len, cache1, kind = 0, None, "miss"
+        if self.prefix_cache is not None:
+            res = self.prefix_cache.lookup(prompt)
+            # a full-prompt hit still needs >=1 suffix token for logits
+            cached_len = min(res.cached_len, len(prompt) - 1)
+            if cached_len > 0:
+                cache1, kind = res.cache, res.kind
+
+        if cache1 is not None:
+            suffix = jnp.asarray([prompt[cached_len:]], jnp.int32)
+            logits, cache1 = self._extend(
+                self.params, cache1, suffix,
+                jnp.full((1,), cached_len, jnp.int32))
+            self.model_steps["extend_tokens"] += len(prompt) - cached_len
+            req.usage += TokenUsage(input_tokens=len(prompt) - cached_len,
+                                    cache_read_tokens=cached_len,
+                                    cache_write_tokens=len(prompt) - cached_len)
+        else:
+            padded = len(prompt)
+            if padded % self.prefill_bucket:
+                padded += self.prefill_bucket - padded % self.prefill_bucket
+            toks = np.zeros((1, padded), np.int32)
+            toks[0, :len(prompt)] = prompt
+            logits, cache1 = self._prefill(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([len(prompt)], jnp.int32))
+            self.model_steps["prefill_tokens"] += len(prompt)
+            req.usage += TokenUsage(input_tokens=len(prompt),
+                                    cache_write_tokens=len(prompt))
+        req.prefill_steps += 1
+
+        if self.prefix_cache is not None:
+            # snapshot immediately after prefill: concurrent requests with
+            # the same prompt (best-of-N, judge fan-out) hit right away
+            self.prefix_cache.insert(list(prompt), cache1)
+
+        self._set_slot_cache(slot, cache1)
+        self.rng, k = jax.random.split(self.rng)
+        tok = int(sampler.sample(logits[0], k, req.temperature))
+        req.output.append(tok)
+        req.usage.output_tokens += 1
+        req.status = Status.DECODING
+        self.slots[slot] = req
+        self.pos[slot] = len(prompt)
+        self.next_token[slot] = tok
+        self._maybe_finish(slot)
+
+    def _maybe_finish(self, slot: int) -> None:
+        req = self.slots[slot]
+        if req is None:
+            return
+        cap = self._budget_cap(req)
+        if req.eos_id is not None and req.output and req.output[-1] == req.eos_id:
+            req.stop_reason = "eos"
+        elif len(req.output) >= cap:
+            req.stop_reason = ("budget" if cap < req.max_new_tokens
+                               else "max_tokens")
+        else:
+            return
+        req.status = Status.DONE
+        if self.prefix_cache is not None:
+            # snapshot the conversation INCLUDING the token just produced:
+            # its KV was written during the decode step that produced the
+            # next logits... the last sampled token is NOT yet in the cache,
+            # so snapshot prompt+output[:-1].
+            convo = list(req.prompt) + req.output[:-1]
+            if len(convo) > 0:
+                self.prefix_cache.insert(convo, self._slot_cache(slot))
+        self.slots[slot] = None
+
+    def step(self) -> bool:
+        """One scheduler tick.  Returns False when fully idle."""
+        # admit queued requests into free slots
+        for slot in range(len(self.slots)):
+            if self.slots[slot] is None and self.queue:
+                self._start(self.queue.popleft(), slot)
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return bool(self.queue)
+
+        tokens = jnp.asarray(self.next_token[:, None], jnp.int32)
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
+        self.model_steps["decode_batch_steps"] += 1
+        self.model_steps["decode_steps"] += len(active)
+
+        logits_np = None
+        for slot in active:
+            req = self.slots[slot]
+            self.rng, k = jax.random.split(self.rng)
+            tok = int(sampler.sample(logits[slot], k, req.temperature))
+            req.output.append(tok)
+            req.usage.output_tokens += 1
+            req.decode_steps += 1
+            self.pos[slot] += 1
+            self.next_token[slot] = tok
+            self._maybe_finish(slot)
+        return True

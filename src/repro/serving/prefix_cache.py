@@ -1,0 +1,123 @@
+"""Token-prefix KV/state cache — the paper's prompt caching, TPU-native.
+
+Entries snapshot a request's full per-layer decode cache (KV pages for
+attention stages, conv/recurrent state for mamba/rglru stages) keyed by
+the exact token sequence.  Lookup returns the longest stored entry that
+prefix-matches a new prompt:
+
+  * full-entry hits are always reusable (states summarize exactly that
+    prefix);
+  * PARTIAL hits (stored sequence diverges after position p) are reusable
+    only for attention-pure models, by *truncating* the KV cache to a
+    page-aligned boundary <= p (tok indices beyond the cut are masked to
+    -1).  Recurrent state summarizes the entire stored prefix, so partial
+    reuse is structurally impossible for SSM/hybrid stages — the trie
+    enforces exact-boundary semantics for them (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass
+class Entry:
+    tokens: Tuple[int, ...]
+    cache: PyTree                  # B=1 decode cache snapshot
+    last_used: float = field(default_factory=time.monotonic)
+    hits: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(self.cache))
+
+
+def _common_prefix(a: Tuple[int, ...], b: Tuple[int, ...]) -> int:
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
+
+
+def truncate_attention_cache(cache: PyTree, keep_len: int) -> PyTree:
+    """Mask out cached tokens at positions >= keep_len (attention-only)."""
+
+    def fix(path, x):
+        if any(getattr(k, "key", None) == "tok" for k in path):
+            return jnp.where(x < keep_len, x, -1)
+        return x
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+@dataclass
+class LookupResult:
+    cached_len: int
+    cache: Optional[PyTree]
+    kind: str                      # "miss" | "full" | "partial"
+
+
+class PrefixCache:
+    """LRU prefix cache over conversation caches."""
+
+    def __init__(self, page_size: int = 256, max_entries: int = 64,
+                 recurrent: bool = False):
+        self.page_size = page_size
+        self.max_entries = max_entries
+        self.recurrent = recurrent       # model has mamba/rglru stages
+        self.entries: Dict[Tuple[int, ...], Entry] = {}
+        self.stats = {"hits": 0, "partial_hits": 0, "misses": 0,
+                      "evictions": 0, "tokens_saved": 0}
+
+    def lookup(self, tokens: List[int]) -> LookupResult:
+        key = tuple(tokens)
+        best: Optional[Tuple[int, Entry, str]] = None
+        for k, e in self.entries.items():
+            p = _common_prefix(key, k)
+            if p == len(k) and p > 0:
+                # stored sequence is itself a prefix of the new prompt
+                if best is None or p > best[0]:
+                    best = (p, e, "full")
+            elif not self.recurrent and p >= self.page_size:
+                cut = (p // self.page_size) * self.page_size
+                if best is None or cut > best[0]:
+                    best = (cut, e, "partial")
+        if best is None:
+            self.stats["misses"] += 1
+            return LookupResult(0, None, "miss")
+        plen, entry, kind = best
+        entry.last_used = time.monotonic()
+        entry.hits += 1
+        self.stats["hits" if kind == "full" else "partial_hits"] += 1
+        self.stats["tokens_saved"] += plen
+        cache = entry.cache
+        if kind == "partial":
+            cache = truncate_attention_cache(cache, plen)
+        # deep-copy leaves so the caller can mutate its cache freely
+        cache = jax.tree_util.tree_map(lambda x: x + 0 if hasattr(x, "shape")
+                                       else x, cache)
+        return LookupResult(plen, cache, kind)
+
+    def insert(self, tokens: List[int], cache: PyTree) -> None:
+        key = tuple(tokens)
+        if key in self.entries:
+            self.entries[key].cache = cache
+            self.entries[key].last_used = time.monotonic()
+            return
+        if len(self.entries) >= self.max_entries:
+            victim = min(self.entries.values(), key=lambda e: e.last_used)
+            del self.entries[victim.tokens]
+            self.stats["evictions"] += 1
+        self.entries[key] = Entry(key, cache)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(e.nbytes for e in self.entries.values())

@@ -1,0 +1,63 @@
+"""Request / usage dataclasses for the reflection-aware serving engine."""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import List, Optional
+
+_uid = itertools.count()
+
+
+class Status(Enum):
+    QUEUED = "queued"
+    DECODING = "decoding"
+    DONE = "done"
+    CANCELLED = "cancelled"
+
+
+class BudgetTier(Enum):
+    """Paper §3.2 thinking budgets."""
+    NONE = "none"
+    LOW = "low"       # 1024 thinking tokens
+    HIGH = "high"     # 4096 thinking tokens
+
+
+@dataclass
+class TokenUsage:
+    """Bedrock-style token accounting (cache-aware, Appendix B.4)."""
+    input_tokens: int = 0          # fresh prefill tokens
+    cache_read_tokens: int = 0     # prefix-cache hits (billed at discount)
+    cache_write_tokens: int = 0    # tokens newly written to the prefix cache
+    output_tokens: int = 0
+
+    def __iadd__(self, o: "TokenUsage"):
+        self.input_tokens += o.input_tokens
+        self.cache_read_tokens += o.cache_read_tokens
+        self.cache_write_tokens += o.cache_write_tokens
+        self.output_tokens += o.output_tokens
+        return self
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 128
+    temperature: float = 0.0
+    eos_id: Optional[int] = 2
+    budget: BudgetTier = BudgetTier.NONE
+    conversation_id: Optional[str] = None   # prefix-cache key namespace
+    round_idx: int = 0                      # reflection round
+    uid: int = field(default_factory=lambda: next(_uid))
+
+    # runtime state
+    status: Status = Status.QUEUED
+    output: List[int] = field(default_factory=list)
+    usage: TokenUsage = field(default_factory=TokenUsage)
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    stop_reason: Optional[str] = None
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + len(self.output)

@@ -1,0 +1,23 @@
+"""Token sampling (greedy / temperature)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@jax.jit
+def sample_temperature(logits: jax.Array, key: jax.Array,
+                       temperature: jax.Array) -> jax.Array:
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def sample(logits, key, temperature: float):
+    if temperature <= 0.0:
+        return greedy(logits)
+    return sample_temperature(logits, key, jnp.float32(temperature))

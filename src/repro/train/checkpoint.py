@@ -1,0 +1,66 @@
+"""msgpack-based checkpointing for param/optimizer pytrees.
+
+Arrays are stored as raw bytes + dtype/shape metadata keyed by their
+flattened pytree path, so checkpoints are stable across refactors that
+preserve param names.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save(path: str, tree: PyTree, step: int = 0) -> None:
+    flat = {}
+    for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        a = np.asarray(jax.device_get(leaf))
+        if a.dtype == jnp.bfloat16:
+            flat[_path_str(p)] = {"d": "bfloat16", "s": list(a.shape),
+                                  "b": a.view(np.uint16).tobytes()}
+        else:
+            flat[_path_str(p)] = {"d": a.dtype.str, "s": list(a.shape),
+                                  "b": a.tobytes()}
+    payload = {"step": step, "arrays": flat}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: PyTree) -> tuple[PyTree, int]:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    arrays = payload["arrays"]
+
+    def rebuild(p, leaf):
+        rec = arrays[_path_str(p)]
+        if rec["d"] == "bfloat16":
+            a = np.frombuffer(rec["b"], np.uint16).reshape(rec["s"])
+            return jnp.asarray(a.view(jnp.bfloat16))
+        a = np.frombuffer(rec["b"], np.dtype(rec["d"])).reshape(rec["s"])
+        return jnp.asarray(a)
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = [rebuild(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like),
+                                        leaves), payload["step"]

@@ -1,0 +1,142 @@
+"""Training step construction: loss, gradient accumulation, clipping.
+
+``make_train_step(model, tcfg)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable
+for ``jax.jit`` with sharding annotations (see launch/dryrun.py) — the
+exact function the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.train import optimizer as opt
+
+PyTree = Any
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 z_loss: float = 0.0,
+                 mask: jax.Array = None) -> Tuple[jax.Array, Dict]:
+    """Mean cross entropy in f32 with optional z-loss regularizer."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(nll * mask) / denom
+        acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / denom
+    else:
+        loss = jnp.mean(nll)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"xent": loss, "accuracy": acc}
+
+
+def chunked_xent(model, params: PyTree, hidden: jax.Array,
+                 labels: jax.Array, chunk: int, z_loss: float,
+                 mask: jax.Array = None) -> Tuple[jax.Array, Dict]:
+    """Cross entropy without materializing the full [B,S,V] logits.
+
+    The unembed matmul + softmax run one sequence-chunk at a time under
+    remat, so peak memory is O(B * chunk * V) — required for the
+    256k-vocab architectures at 4k sequence length.
+    """
+    B, S, _ = hidden.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    h = hidden.reshape(B, n, c, -1).swapaxes(0, 1)          # [n,B,c,d]
+    lab = labels.reshape(B, n, c).swapaxes(0, 1)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    mk = mask.reshape(B, n, c).swapaxes(0, 1).astype(jnp.float32)
+
+    @jax.checkpoint
+    def one(hc, lc, mc):
+        logits = model.unembed(params, hc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = lse - ll
+        if z_loss:
+            nll = nll + z_loss * jnp.square(lse)
+        hits = (jnp.argmax(logits, -1) == lc).astype(jnp.float32)
+        return jnp.sum(nll * mc), jnp.sum(hits * mc)
+
+    def body(carry, xs):
+        nll_s, hit_s = carry
+        a, b = one(*xs)
+        return (nll_s + a, hit_s + b), None
+
+    (nll_sum, hit_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (h, lab, mk))
+    denom = jnp.maximum(jnp.sum(mk), 1.0)
+    loss = nll_sum / denom
+    return loss, {"xent": loss, "accuracy": hit_sum / denom}
+
+
+def make_loss_fn(model, cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    def loss_fn(params: PyTree, batch: Dict) -> Tuple[jax.Array, Dict]:
+        mask = batch.get("loss_mask")
+        if tcfg.loss_chunk:
+            hidden, aux = model.forward(params, batch, remat=tcfg.remat,
+                                        return_hidden=True)
+            loss, metrics = chunked_xent(model, params, hidden,
+                                         batch["labels"], tcfg.loss_chunk,
+                                         tcfg.z_loss, mask)
+        else:
+            logits, aux = model.forward(params, batch, remat=tcfg.remat)
+            loss, metrics = softmax_xent(logits, batch["labels"],
+                                         tcfg.z_loss, mask)
+        if cfg.num_experts:
+            loss = loss + cfg.router_aux_weight * aux
+            metrics["router_aux"] = aux
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(model, cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    loss_fn = make_loss_fn(model, cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params: PyTree, opt_state: PyTree, batch: Dict):
+        mb = tcfg.microbatch
+        B = batch["tokens"].shape[0]
+        if mb and mb < B:
+            assert B % mb == 0, (B, mb)
+            n = B // mb
+            resh = jax.tree_util.tree_map(
+                lambda x: x.reshape((n, mb) + x.shape[1:]), batch)
+
+            def acc_body(carry, mb_batch):
+                g_acc, l_acc = carry
+                (loss, metrics), g = grad_fn(params, mb_batch)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32) / n, g_acc, g)
+                return (g_acc, l_acc + loss / n), metrics
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), resh)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+            metrics["loss"] = loss
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        grads, gnorm = opt.clip_by_global_norm(grads, tcfg.grad_clip)
+        params, opt_state, om = opt.opt_update(params, grads, opt_state, tcfg)
+        metrics.update(om)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,153 @@
+"""Pure-JAX optimizers: AdamW and Adafactor (factored second moments).
+
+Adafactor is the default for the mega-architectures (nemotron-340b,
+kimi-k2-1t): its factored state is O(r+c) per matrix instead of O(r*c),
+which is what makes the 256-chip dry-run memory budget close.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+PyTree = Any
+
+
+def lr_schedule(tcfg: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(tcfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - tcfg.warmup_steps)
+                    / max(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * frac)
+    return tcfg.learning_rate * warm * cos
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params: PyTree) -> Dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: Dict,
+                 tcfg: TrainConfig) -> Tuple[PyTree, Dict, Dict]:
+    step = state["step"] + 1
+    lr = lr_schedule(tcfg, step)
+    b1, b2, eps = tcfg.beta1, tcfg.beta2, tcfg.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        u = u + tcfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    out = [upd(*t) for t in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    metrics = {"lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moments, no momentum
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params: PyTree) -> Dict:
+    def slot(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "slots": jax.tree_util.tree_map(slot, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params: PyTree, grads: PyTree, state: Dict,
+                     tcfg: TrainConfig) -> Tuple[PyTree, Dict, Dict]:
+    step = state["step"] + 1
+    lr = lr_schedule(tcfg, step)
+    beta2 = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+    eps = 1e-30
+
+    def upd(p, g, slot):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p.shape):
+            vr = beta2 * slot["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * slot["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            rfac = (vr / jnp.maximum(denom, eps))[..., None]
+            u = g * jax.lax.rsqrt(jnp.maximum(rfac * vc[..., None, :], eps))
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * slot["v"] + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+            new_slot = {"v": v}
+        # update clipping (RMS <= 1) as in the paper
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms)
+        u = u + tcfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_slot
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    slots_flat = jax.tree_util.tree_leaves(
+        state["slots"], is_leaf=lambda x: isinstance(x, dict) and
+        ("v" in x or "vr" in x))
+    out = [upd(*t) for t in zip(flat_p, flat_g, slots_flat)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_slots = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    return new_p, {"slots": new_slots, "step": step}, {"lr": lr}
+
+
+# ---------------------------------------------------------------------------
+
+def opt_init(params: PyTree, tcfg: TrainConfig) -> Dict:
+    if tcfg.optimizer == "adafactor":
+        return adafactor_init(params)
+    return adamw_init(params)
+
+
+def opt_update(params, grads, state, tcfg: TrainConfig):
+    if tcfg.optimizer == "adafactor":
+        return adafactor_update(params, grads, state, tcfg)
+    return adamw_update(params, grads, state, tcfg)

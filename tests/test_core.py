@@ -1,0 +1,173 @@
+"""Core-library tests: pareto (with hypothesis invariants), accounting,
+statistics, text metrics, quality-sim invariants, budget tiers."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quality_sim as QS
+from repro.core import stats as S
+from repro.core.accounting import CostModel, LatencyModel, roofline_step_seconds
+from repro.core.budget import InferenceStrategy, standard_strategies
+from repro.core.pareto import ConfigPoint, dominates, pareto_frontier, sweet_spot
+from repro.core.textmetrics import bleu, meteor_lite
+from repro.serving.request import BudgetTier, TokenUsage
+
+
+# ---------------------------------------------------------------------------
+# Pareto
+# ---------------------------------------------------------------------------
+
+def _pt(name, acc, lat, cost):
+    return ConfigPoint(name, "m", "s", acc, lat, cost)
+
+
+def test_dominates():
+    a, b = _pt("a", 90, 1, 0.1), _pt("b", 80, 2, 0.2)
+    assert dominates(a, b) and not dominates(b, a)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 100), st.floats(0.1, 100),
+                          st.floats(0.001, 1)), min_size=1, max_size=30))
+def test_frontier_is_nondominated(raw):
+    pts = [_pt(f"p{i}", a, l, c) for i, (a, l, c) in enumerate(raw)]
+    front = pareto_frontier(pts)
+    assert front, "frontier never empty"
+    for f in front:
+        for p in pts:
+            assert not (p.accuracy > f.accuracy and p.latency_s < f.latency_s)
+    # every point is dominated-or-on-frontier
+    names = {f.name for f in front}
+    for p in pts:
+        if p.name not in names:
+            assert any(q.accuracy >= p.accuracy and q.latency_s <= p.latency_s
+                       and (q.accuracy > p.accuracy or q.latency_s < p.latency_s)
+                       for q in pts)
+
+
+def test_sweet_spot_respects_ceilings():
+    pts = [_pt("cheap", 60, 1, 0.001), _pt("mid", 80, 5, 0.01),
+           _pt("lux", 95, 30, 0.1)]
+    assert sweet_spot(pts, max_latency_s=10).name == "mid"
+    assert sweet_spot(pts).name == "lux"
+    assert sweet_spot(pts, max_latency_s=0.1) is None
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+def test_cost_model_cache_discount():
+    cm = CostModel.for_model("sonnet37")
+    u = TokenUsage(input_tokens=100, cache_read_tokens=1000,
+                   cache_write_tokens=100, output_tokens=10)
+    with_cache = cm.cost(u, prompt_caching=True)
+    without = cm.cost(u, prompt_caching=False)
+    assert with_cache < without
+    # manual: 100*1.25*0.003 + 1000*0.0003 + 10*0.015 all /1000
+    want = (100 * 0.003 * 1.25 + 1000 * 0.003 * 0.1 + 10 * 0.015) / 1000
+    assert abs(with_cache - want) < 1e-9
+
+
+def test_latency_model_monotone_in_output():
+    lm = LatencyModel.for_model("nova_micro")
+    u1 = TokenUsage(input_tokens=100, output_tokens=10)
+    u2 = TokenUsage(input_tokens=100, output_tokens=100)
+    assert lm.latency(u2) > lm.latency(u1)
+
+
+def test_roofline_terms():
+    t = roofline_step_seconds(197e12, 819e9 * 2, 50e9 * 0.5)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 2.0) < 1e-9
+    assert t["bottleneck"] == "memory_s" and t["step_s"] == t["memory_s"]
+
+
+# ---------------------------------------------------------------------------
+# Statistics
+# ---------------------------------------------------------------------------
+
+def test_betainc_known_values():
+    # I_x(1,1) = x (uniform CDF)
+    for x in (0.1, 0.5, 0.9):
+        assert abs(S.betainc(1, 1, x) - x) < 1e-9
+    # symmetric beta(2,2): I_0.5 = 0.5
+    assert abs(S.betainc(2, 2, 0.5) - 0.5) < 1e-9
+
+
+def test_t_sf_matches_normal_for_large_df():
+    # t(inf) -> normal: sf(1.96) ~ 0.025
+    assert abs(S.t_sf(1.96, 10_000) - 0.025) < 1e-3
+
+
+def test_welch_detects_difference():
+    rng = np.random.default_rng(0)
+    a = rng.normal(0.0, 1.0, 200)
+    b = rng.normal(0.5, 1.0, 200)
+    _, p = S.welch_t_test(a, b)
+    assert p < 0.01
+    _, p_same = S.welch_t_test(a, a + 0.0)
+    assert p_same > 0.9
+
+
+def test_friedman_and_nemenyi():
+    rng = np.random.default_rng(1)
+    n, k = 60, 5
+    base = rng.normal(0, 1, (n, 1))
+    scores = base + np.arange(k)[None, :] * 0.8 + rng.normal(0, 0.1, (n, k))
+    chi2, p = S.friedman_test(scores)
+    assert p < 1e-6
+    frac = S.nemenyi_significant_fraction(scores)
+    assert frac > 0.5
+    # null: no differences
+    null = rng.normal(0, 1, (n, k))
+    _, p_null = S.friedman_test(null)
+    assert p_null > 0.05
+
+
+def test_gammainc_q():
+    # Q(1, x) = exp(-x)
+    for x in (0.5, 1.0, 3.0):
+        assert abs(S.gammainc_q(1.0, x) - math.exp(-x)) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Text metrics
+# ---------------------------------------------------------------------------
+
+def test_bleu_meteor_basic():
+    assert bleu("a b c d", "a b c d") > 0.99
+    assert bleu("a b c d", "e f g h") < 0.01
+    assert meteor_lite("a b c d", "a b c d") > 0.95
+    assert 0 < meteor_lite("a b x d", "a b c d") < 1
+    assert meteor_lite("d c b a", "a b c d") < meteor_lite("a b c d", "a b c d")
+
+
+# ---------------------------------------------------------------------------
+# Quality simulator invariants
+# ---------------------------------------------------------------------------
+
+def test_marginals_match_calibration():
+    for domain in ("math500", "spider"):
+        for model in ("sonnet37", "nova_micro"):
+            t = QS.simulate_trajectories(domain, model, 20_000, 3, seed=0)
+            accs = t.correct.mean(axis=0) * 100
+            assert abs(accs[0] - QS.accuracy_at(domain, model, 0)) < 1.5
+            assert abs(accs[1] - QS.accuracy_at(domain, model, 1)) < 1.5
+            assert abs(accs[3] - QS.accuracy_at(domain, model, 3)) < 1.5
+
+
+def test_retention_invariant_math():
+    t = QS.simulate_trajectories("math500", "sonnet37", 5000, 3, seed=2)
+    for c in QS.transition_counts(t):
+        assert c["CI"] == 0
+
+
+def test_strategies_enumeration():
+    s = standard_strategies()
+    names = {x.name for x in s}
+    assert {"reflect0", "reflect1", "reflect3", "think_low",
+            "think_high"} == names
+    assert InferenceStrategy(1, feedback="exec").name == "reflect1+exec"

@@ -1,0 +1,23 @@
+"""Multi-pod dry-run smoke: run one cheap combo in a fresh process (the
+512-device XLA flag must be set before jax init, so in-process is not an
+option here)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_one_combo(mesh):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "whisper_tiny",
+         "--shape", "decode_32k", "--mesh", mesh],
+        capture_output=True, text=True, env=env, timeout=560, cwd=REPO)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "all dry-runs passed" in out.stdout

@@ -1,0 +1,136 @@
+"""Serving-engine behaviour tests: continuous batching, prefix cache
+semantics (incl. recurrent-state exact-boundary rule), budget tiers,
+accounting invariants."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ServeConfig
+from repro.models.registry import build_model, get_smoke_config
+from repro.serving.engine import Engine
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.request import BudgetTier, Request, Status
+
+
+def make_engine(arch="qwen3_0_6b", **kw):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(**{**dict(max_batch=3, max_seq=160, page_size=8), **kw})
+    return Engine(m, params, scfg), m, params
+
+
+def test_batched_decode_matches_sequential():
+    """Continuous batching must not change any request's tokens."""
+    eng, m, params = make_engine(prefix_cache=False)
+    prompts = [[1] + list(range(10, 18)),
+               [1] + list(range(30, 45)),
+               [1] + list(range(50, 55))]
+    reqs = [Request(prompt=p, max_new_tokens=6, eos_id=None) for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for p, r in zip(prompts, reqs):
+        eng1, _, _ = make_engine(prefix_cache=False, max_batch=1)
+        solo = Request(prompt=list(p), max_new_tokens=6, eos_id=None)
+        eng1.submit(solo)
+        eng1.run()
+        assert solo.output == r.output, "batching changed outputs"
+
+
+@pytest.mark.parametrize("arch", ["qwen3_0_6b", "granite_moe_1b_a400m",
+                                  "falcon_mamba_7b", "recurrentgemma_9b"])
+def test_prefix_cache_identity_across_archs(arch):
+    """Cached vs uncached engines emit identical tokens (incl. SSM/hybrid
+    state-snapshot reuse)."""
+    outs = {}
+    for pc in (True, False):
+        eng, _, _ = make_engine(arch, prefix_cache=pc)
+        convo = [1] + list(range(10, 30))
+        toks = []
+        for _ in range(2):
+            r = Request(prompt=list(convo), max_new_tokens=5, eos_id=None)
+            eng.submit(r)
+            eng.run()
+            toks.append(list(r.output))
+            convo += r.output + [40, 41]
+        outs[pc] = toks
+    assert outs[True] == outs[False]
+
+
+def test_recurrent_model_full_hits_only():
+    """SSM caches must never be truncated to partial prefixes."""
+    eng, _, _ = make_engine("falcon_mamba_7b")
+    assert eng.prefix_cache.recurrent
+    base = [1] + list(range(10, 30))
+    r1 = Request(prompt=list(base), max_new_tokens=4, eos_id=None)
+    eng.submit(r1)
+    eng.run()
+    # diverging prompt shares a long prefix but not a full stored entry
+    div = list(base)
+    div[-1] = 99
+    div += [100, 101]
+    r2 = Request(prompt=div, max_new_tokens=4, eos_id=None)
+    eng.submit(r2)
+    eng.run()
+    assert eng.prefix_cache.stats["partial_hits"] == 0
+    assert r2.usage.cache_read_tokens == 0
+
+
+def test_attention_model_partial_hits():
+    eng, _, _ = make_engine("qwen3_0_6b", page_size=8)
+    base = [1] + list(range(10, 34))       # 25 tokens
+    r1 = Request(prompt=list(base), max_new_tokens=4, eos_id=None)
+    eng.submit(r1)
+    eng.run()
+    div = list(base)
+    div[20] = 99                           # diverge at position 20
+    r2 = Request(prompt=div + [70, 71], max_new_tokens=4, eos_id=None)
+    eng.submit(r2)
+    eng.run()
+    assert eng.prefix_cache.stats["partial_hits"] == 1
+    assert r2.usage.cache_read_tokens == 16   # page-aligned floor of 20
+
+
+def test_budget_tiers():
+    eng, _, _ = make_engine(max_think_tokens_low=4, max_think_tokens_high=12)
+    lo = Request(prompt=[1, 2, 3], max_new_tokens=50, eos_id=None,
+                 budget=BudgetTier.LOW)
+    hi = Request(prompt=[1, 2, 3], max_new_tokens=50, eos_id=None,
+                 budget=BudgetTier.HIGH)
+    no = Request(prompt=[1, 2, 3], max_new_tokens=9, eos_id=None)
+    for r in (lo, hi, no):
+        eng.submit(r)
+    eng.run()
+    assert len(lo.output) == 4 and lo.stop_reason == "budget"
+    assert len(hi.output) == 12 and hi.stop_reason == "budget"
+    assert len(no.output) == 9 and no.stop_reason == "max_tokens"
+
+
+def test_usage_accounting_conserved():
+    eng, _, _ = make_engine()
+    r = Request(prompt=[1] + list(range(20, 40)), max_new_tokens=7,
+                eos_id=None)
+    eng.submit(r)
+    eng.run()
+    assert r.usage.input_tokens + r.usage.cache_read_tokens == 21
+    assert r.usage.output_tokens == len(r.output) == 7
+    assert r.status == Status.DONE
+
+
+def test_queue_exceeding_slots():
+    eng, _, _ = make_engine(max_batch=2)
+    reqs = [Request(prompt=[1, 10 + i], max_new_tokens=4, eos_id=None)
+            for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.status == Status.DONE for r in reqs)
+
+
+def test_prefix_cache_eviction():
+    pc = PrefixCache(page_size=4, max_entries=2)
+    pc.insert([1, 2, 3, 4], {"x": jnp.zeros(4)})
+    pc.insert([5, 6, 7, 8], {"x": jnp.zeros(4)})
+    pc.insert([9, 10, 11, 12], {"x": jnp.zeros(4)})
+    assert len(pc.entries) == 2 and pc.stats["evictions"] == 1

@@ -1,0 +1,53 @@
+"""Hypothesis fuzzing of the serving engine: random request mixes must
+preserve the engine's core invariants (cache-identity, accounting
+conservation, completion)."""
+import jax
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.configs.base import ServeConfig
+from repro.models.registry import build_model, get_smoke_config
+from repro.serving.engine import Engine
+from repro.serving.request import BudgetTier, Request, Status
+
+
+@pytest.fixture(scope="module")
+def model_setup():
+    cfg = get_smoke_config("qwen3_0_6b").replace(dtype="float32")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+req_strategy = st.lists(
+    st.tuples(
+        st.lists(st.integers(3, 250), min_size=1, max_size=24),  # prompt
+        st.integers(1, 8),                                       # max_new
+        st.sampled_from([BudgetTier.NONE, BudgetTier.LOW]),
+    ),
+    min_size=1, max_size=5)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(reqs=req_strategy)
+def test_engine_fuzz_invariants(model_setup, reqs):
+    model, params = model_setup
+    outs = {}
+    for pc in (True, False):
+        eng = Engine(model, params,
+                     ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                                 prefix_cache=pc, max_think_tokens_low=4))
+        rr = [Request(prompt=[1] + p, max_new_tokens=mn, eos_id=None,
+                      budget=b) for p, mn, b in reqs]
+        for r in rr:
+            eng.submit(r)
+        eng.run()
+        for r, (p, mn, b) in zip(rr, reqs):
+            assert r.status == Status.DONE
+            cap = min(mn, 4) if b == BudgetTier.LOW else mn
+            assert len(r.output) == cap
+            assert r.usage.output_tokens == len(r.output)
+            assert (r.usage.input_tokens + r.usage.cache_read_tokens
+                    == len(p) + 1)
+        outs[pc] = [r.output for r in rr]
+    assert outs[True] == outs[False], "prefix cache changed outputs"

@@ -1,0 +1,67 @@
+"""Prompt-caching invariant: prefill(prefix) + prefill_extend(suffix)
+must reproduce prefill(full) exactly — logits AND subsequent decode.
+
+This is the correctness contract behind reflection-round prefix reuse
+(paper Appendix B.4), including the recurrent-state snapshot semantics
+for SSM/RG-LRU layers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import build_model, get_smoke_config, model_inputs
+
+EXTEND_ARCHS = ["qwen3_0_6b", "yi_6b", "granite_moe_1b_a400m",
+                "falcon_mamba_7b", "recurrentgemma_9b", "whisper_tiny",
+                "reflect_demo_100m"]
+
+
+def _f32(a):
+    return np.asarray(a, dtype=np.float32)
+
+
+@pytest.mark.parametrize("arch", EXTEND_ARCHS)
+def test_extend_matches_full_prefill(arch):
+    cfg = get_smoke_config(arch).replace(dtype="float32", capacity_factor=8.0)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S, split = 2, 14, 9
+    batch = model_inputs(cfg, B, S)
+    tokens = batch["tokens"]
+    kw = {}
+    if cfg.arch_type == "audio":
+        kw["frames"] = batch["frames"]
+
+    lg_full, cache_full = m.prefill(params, tokens, max_seq=S + 8, **kw)
+    lg_pre, cache = m.prefill(params, tokens[:, :split], max_seq=S + 8, **kw)
+    lg_ext, cache = m.prefill_extend(params, cache, tokens[:, split:],
+                                     jnp.full((B,), split, jnp.int32))
+    np.testing.assert_allclose(_f32(lg_ext), _f32(lg_full), atol=3e-4,
+                               rtol=3e-3)
+
+    # decode must continue identically from both caches
+    nxt = jnp.argmax(lg_full, -1)[:, None].astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    d_full, _ = m.decode_step(params, cache_full, nxt, pos)
+    d_ext, _ = m.decode_step(params, cache, nxt, pos)
+    np.testing.assert_allclose(_f32(d_ext), _f32(d_full), atol=3e-4, rtol=3e-3)
+
+
+def test_multi_round_extension():
+    """Three reflection-round-style extensions chain correctly."""
+    cfg = get_smoke_config("qwen3_0_6b").replace(dtype="float32")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 1, 24
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0,
+                                cfg.vocab_size)
+    lg_full, _ = m.prefill(params, tokens, max_seq=S + 4)
+
+    _, cache = m.prefill(params, tokens[:, :6], max_seq=S + 4)
+    pos = 6
+    for chunk in (6, 6, 6):
+        lg, cache = m.prefill_extend(params, cache, tokens[:, pos:pos + chunk],
+                                     jnp.full((B,), pos, jnp.int32))
+        pos += chunk
+    np.testing.assert_allclose(_f32(lg), _f32(lg_full), atol=3e-4, rtol=3e-3)

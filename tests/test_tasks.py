@@ -1,0 +1,81 @@
+"""Synthetic task suites + the mini-SQL executor (the real feedback
+substrate), with hypothesis property tests on the executor."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.tasks import (make_math_tasks, make_sentiment_tasks,
+                              make_sql_tasks, make_translation_tasks, run_sql)
+from repro.data.tokenizer import ByteTokenizer
+
+
+def test_math_tasks_verify():
+    for t in make_math_tasks(20):
+        assert t.verify(f"blah <answer>{t.answer}</answer>")
+        assert not t.verify(f"<answer>{t.answer + 1}</answer>")
+        assert not t.verify("no tags here")
+
+
+def test_sql_tasks_gold_passes():
+    for t in make_sql_tasks(20):
+        assert t.verify(f"<SQL>{t.gold_query}</SQL>")
+        assert not t.verify("<SQL>SELECT broken FROM nowhere</SQL>")
+
+
+def test_sentiment_tasks():
+    for t in make_sentiment_tasks(20):
+        assert t.verify(f"<sentiment>{t.label}</sentiment>")
+        wrong = "negative" if t.label == "positive" else "positive"
+        assert not t.verify(f"<sentiment>{wrong}</sentiment>")
+
+
+def test_translation_tasks():
+    for t in make_translation_tasks(20):
+        assert t.verify(f"<translation>{t.reference}</translation>")
+        assert t.score("<translation>zzz qqq</translation>") < 0.3
+
+
+# ---------------------------------------------------------------------------
+# SQL executor
+# ---------------------------------------------------------------------------
+
+TABLES = {"t": {"a": [3, 1, 2], "b": ["x", "y", "z"]}}
+
+
+def test_sql_select_star():
+    assert run_sql("SELECT * FROM t", TABLES) == [(3, "x"), (1, "y"), (2, "z")]
+
+
+def test_sql_where_order_limit():
+    assert run_sql("SELECT a FROM t WHERE a > 1 ORDER BY a", TABLES) == \
+        [(2,), (3,)]
+    assert run_sql("SELECT a FROM t ORDER BY a DESC LIMIT 2", TABLES) == \
+        [(3,), (2,)]
+    assert run_sql("SELECT COUNT(*) FROM t WHERE b = 'y'", TABLES) == [(1,)]
+
+
+def test_sql_errors():
+    with pytest.raises(ValueError):
+        run_sql("SELECT a FROM missing", TABLES)
+    with pytest.raises(ValueError):
+        run_sql("SELECT nope FROM t", TABLES)
+    with pytest.raises(ValueError):
+        run_sql("DROP TABLE t", TABLES)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(-50, 50), min_size=1, max_size=20),
+       st.integers(-50, 50))
+def test_sql_where_matches_python(values, threshold):
+    tables = {"v": {"x": values}}
+    got = run_sql(f"SELECT x FROM v WHERE x > {threshold}", tables)
+    want = [(v,) for v in values if v > threshold]
+    assert got == want
+    cnt = run_sql(f"SELECT COUNT(*) FROM v WHERE x <= {threshold}", tables)
+    assert cnt == [(len(values) - len(want),)]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.text(max_size=60))
+def test_tokenizer_roundtrip(text):
+    tok = ByteTokenizer()
+    assert tok.decode(tok.encode(text)) == text
