@@ -1,0 +1,10 @@
+.PHONY: verify test bench
+
+verify:
+	scripts/verify.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench:
+	PYTHONPATH=src python benchmarks/run.py

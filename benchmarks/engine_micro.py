@@ -1,10 +1,12 @@
 """Serving-engine microbenchmarks on CPU (tiny model): decode throughput,
-prefix-cache effect on prefill volume, budget-tier enforcement."""
+prefix-cache effect on prefill volume, budget-tier enforcement, and
+decode-step tail latency while chunked prefill rides along."""
 from __future__ import annotations
 
 import time
 
 import jax
+import numpy as np
 
 from repro.configs.base import ServeConfig
 from repro.models.registry import build_model, get_smoke_config
@@ -59,6 +61,43 @@ def run(verbose: bool = True):
                  f"{r2.usage.cache_read_tokens / (r2.usage.cache_read_tokens + r2.usage.input_tokens):.2f}"))
     if verbose:
         print(f"engine: round-2 usage {r2.usage}")
+
+    # p99 decode-step latency while a long prompt prefills chunk-by-chunk
+    eng4 = Engine(m, params, ServeConfig(max_batch=4, max_seq=256,
+                                         prefix_cache=False,
+                                         prefill_chunk=16,
+                                         prefill_token_budget=16))
+
+    def mixed_load(record):
+        for i in range(3):
+            eng4.submit(Request(prompt=[1] + list(range(10 + i, 20 + i)),
+                                max_new_tokens=24, eos_id=None))
+        lat = []
+        submitted = False
+        steps = 0
+        while True:
+            if steps == 8 and not submitted:      # long prompt mid-decode
+                eng4.submit(Request(prompt=[2] + list(range(100, 187)),
+                                    max_new_tokens=2, eos_id=None))
+                submitted = True
+            decoding = any(r is not None and r.output for r in eng4.slots)
+            t0 = time.perf_counter()
+            alive = eng4.step()
+            if record and decoding:
+                lat.append(time.perf_counter() - t0)
+            steps += 1
+            if not alive and submitted:
+                break
+        return lat
+
+    mixed_load(record=False)                      # warm both compiles
+    lat = np.asarray(mixed_load(record=True)) * 1e6
+    p99 = float(np.percentile(lat, 99))
+    if verbose:
+        print(f"engine: decode-step latency under concurrent chunked "
+              f"prefill p50={np.percentile(lat, 50):.0f}us p99={p99:.0f}us")
+    rows.append(("engine_decode_p99_under_prefill_us", p99,
+                 f"{np.percentile(lat, 50):.0f}us_p50"))
     return rows
 
 

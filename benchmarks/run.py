@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.best_of_n",
     "benchmarks.roofline",
     "benchmarks.engine_micro",
+    "benchmarks.chunked_prefill",
     "benchmarks.kernels_micro",
 ]
 

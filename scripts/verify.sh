@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# CI-friendly verification: tier-1 tests + serving-engine benchmark smoke.
+# Usage: scripts/verify.sh   (or: make verify)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: benchmarks/engine_micro.py =="
+python benchmarks/engine_micro.py
+
+echo "verify: OK"

@@ -162,3 +162,16 @@ class ServeConfig:
     max_think_tokens_high: int = 4096      # paper's "high" thinking budget
     temperature: float = 0.0
     seed: int = 0
+
+    # ---- chunked-prefill scheduler (docs/SERVING.md) ----------------------
+    # Lane width of the mixed prefill+decode step: every scheduler tick
+    # processes a [max_batch, prefill_chunk] token block; a decoding row
+    # occupies one lane, a prefilling row up to prefill_chunk lanes.
+    prefill_chunk: int = 32
+    # Max fresh prefill tokens admitted into one mixed step, across all
+    # rows.  This is the knob that bounds per-step work — and therefore
+    # tail decode-step latency — while prompts stream in.
+    prefill_token_budget: int = 64
+    # Snapshot partial prefixes into the prefix cache at page-aligned
+    # chunk boundaries (concurrent same-prompt requests hit mid-prefill).
+    cache_prefill_chunks: bool = True

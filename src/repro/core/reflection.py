@@ -22,7 +22,7 @@ from repro.core import quality_sim as QS
 from repro.core.accounting import CostModel, LatencyModel
 from repro.core.budget import InferenceStrategy
 from repro.core.feedback import FeedbackProvider, NoFeedback
-from repro.serving.request import BudgetTier, Request, TokenUsage
+from repro.serving.request import BudgetTier, Request, Status, TokenUsage
 
 REFLECT_TEMPLATE = ("Please reiterate your answer by thinking step by step, "
                     "making sure to state your answer at the end of the "
@@ -49,25 +49,52 @@ class ReflectionResult:
 
 
 class EngineBackend:
-    """Runs reflection through the real serving engine."""
+    """Runs reflection through the real serving engine.
+
+    Uses the engine's async submit/poll API: requests are enqueued
+    non-blocking and the backend cooperatively ticks the scheduler until
+    they finish, so many conversations' rounds can share the engine's
+    chunked-prefill mixed steps instead of serializing whole prefills.
+    """
 
     def __init__(self, engine, tokenizer, max_new_tokens: int = 64):
         self.engine = engine
         self.tok = tokenizer
         self.max_new_tokens = max_new_tokens
 
-    def complete(self, conversation: str, conversation_id: str,
-                 budget: BudgetTier) -> Tuple[str, TokenUsage]:
-        req = Request(prompt=self.tok.encode(conversation),
-                      max_new_tokens=self.max_new_tokens,
-                      eos_id=self.tok.eos_id, budget=budget,
-                      conversation_id=conversation_id)
-        self.engine.submit(req)
-        self.engine.run()
+    def _request(self, conversation: str, conversation_id: str,
+                 budget: BudgetTier) -> Request:
+        return Request(prompt=self.tok.encode(conversation),
+                       max_new_tokens=self.max_new_tokens,
+                       eos_id=self.tok.eos_id, budget=budget,
+                       conversation_id=conversation_id)
+
+    def _decode_output(self, req: Request) -> str:
         out = req.output
         if out and out[-1] == self.tok.eos_id:
             out = out[:-1]
-        return self.tok.decode(out), req.usage
+        return self.tok.decode(out)
+
+    def complete(self, conversation: str, conversation_id: str,
+                 budget: BudgetTier) -> Tuple[str, TokenUsage]:
+        text, usage = self.complete_many([(conversation, conversation_id)],
+                                         budget)[0]
+        return text, usage
+
+    def complete_many(self, conversations: List[Tuple[str, str]],
+                      budget: BudgetTier) -> List[Tuple[str, TokenUsage]]:
+        """Submit a batch of (conversation, conversation_id) and poll the
+        engine until all are done — their prefill chunks and decode steps
+        interleave inside the engine's mixed steps."""
+        reqs = [self._request(c, cid, budget) for c, cid in conversations]
+        for r in reqs:
+            self.engine.submit(r)
+        pending = set(r.uid for r in reqs)
+        while pending:
+            self.engine.poll()
+            done = {r.uid for r in reqs if r.status is Status.DONE}
+            pending -= done
+        return [(self._decode_output(r), r.usage) for r in reqs]
 
 
 class SimulatedBackend:

@@ -48,7 +48,9 @@ def main():
     print(f"{args.requests} requests x {args.rounds} rounds in {dt:.2f}s")
     print(f"decode {steps['decode_steps']} tok "
           f"({steps['decode_steps']/dt:.1f} tok/s), prefill "
-          f"{steps['prefill_tokens']} tok, extend {steps['extend_tokens']} tok")
+          f"{steps['prefill_tokens']} tok, extend {steps['extend_tokens']} tok "
+          f"({steps['prefill_chunks']} chunks, {steps['mixed_steps']} mixed "
+          f"steps, max {steps['max_step_prefill_tokens']} prefill tok/step)")
     if engine.prefix_cache:
         print(f"prefix cache: {engine.prefix_cache.stats}")
 

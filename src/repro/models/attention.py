@@ -426,8 +426,43 @@ def attn_block_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
 # Prefix-extension (prompt caching): prefill a SUFFIX on top of a cache
 # ---------------------------------------------------------------------------
 
+def _masked_ring_write(cache: Dict, k: jax.Array, v: jax.Array,
+                       positions: jax.Array, valid: jax.Array) -> Dict:
+    """Write only the valid lanes of a [B, Sx] block into the ring cache.
+
+    Uses a one-hot select (no scatter) so the kv_seq-sharded capacity dim
+    never forces GSPMD resharding, mirroring the decode-path write.  When
+    Sx exceeds the ring capacity, two lanes can alias one slot; the later
+    lane wins (the earlier token has already left the window).
+    """
+    B, Sx = positions.shape
+    C = cache["k"].shape[1]
+    lane = jnp.arange(Sx)
+    # last-wins de-duplication of lanes aliasing the same ring slot
+    same = (positions[:, :, None] % C) == (positions[:, None, :] % C)
+    later = lane[None, None, :] > lane[None, :, None]
+    dup = jnp.any(same & later & valid[:, None, :], axis=-1)
+    keep = valid & ~dup
+    onehot = ((positions[:, :, None] % C) == jnp.arange(C)[None, None, :]) \
+        & keep[:, :, None]                                          # [B,Sx,C]
+    written = jnp.any(onehot, axis=1)                               # [B,C]
+    oh = onehot.astype(k.dtype)
+    k_new = jnp.einsum("bsc,bskd->bckd", oh, k)
+    v_new = jnp.einsum("bsc,bskd->bckd", oh, v)
+    tok_new = jnp.sum(onehot.astype(jnp.int32) * positions[:, :, None],
+                      axis=1)
+    return {
+        "k": jnp.where(written[:, :, None, None],
+                       k_new.astype(cache["k"].dtype), cache["k"]),
+        "v": jnp.where(written[:, :, None, None],
+                       v_new.astype(cache["v"].dtype), cache["v"]),
+        "tok": jnp.where(written, tok_new, cache["tok"]),
+    }
+
+
 def attention_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
-                     pos0: jax.Array, window: Optional[int]
+                     pos0: jax.Array, window: Optional[int],
+                     valid: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, Dict]:
     """Multi-token extension: x: [B, Sx, d] continues at position pos0 [B].
 
@@ -435,6 +470,11 @@ def attention_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
     (cached prefix + suffix) with exact token-index masking.  This is the
     mechanism behind reflection-round prompt caching: round r+1 re-pays
     prefill only for its suffix.
+
+    ``valid`` ([B, Sx] bool, trailing-pad mask) marks the lanes that carry
+    real tokens; invalid lanes are never written to the cache, which is
+    what lets the serving engine batch rows with different chunk sizes
+    (chunked prefill + decode) into one call.
     """
     B, Sx, _ = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -442,23 +482,30 @@ def attention_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
     C = cache["k"].shape[1]
     positions = pos0[:, None] + jnp.arange(Sx)[None, :]            # [B,Sx]
     q, k, v = _qkv(cfg, p, x, positions)
-    slots = positions % C                                           # [B,Sx]
-    b = jnp.broadcast_to(jnp.arange(B)[:, None], (B, Sx))
-    cache = {
-        "k": cache["k"].at[b, slots].set(k.astype(cache["k"].dtype)),
-        "v": cache["v"].at[b, slots].set(v.astype(cache["v"].dtype)),
-        "tok": cache["tok"].at[b, slots].set(positions),
-    }
+    if valid is None:
+        slots = positions % C                                       # [B,Sx]
+        b = jnp.broadcast_to(jnp.arange(B)[:, None], (B, Sx))
+        cache = {
+            "k": cache["k"].at[b, slots].set(k.astype(cache["k"].dtype)),
+            "v": cache["v"].at[b, slots].set(v.astype(cache["v"].dtype)),
+            "tok": cache["tok"].at[b, slots].set(positions),
+        }
+    else:
+        cache = _masked_ring_write(cache, k, v, positions, valid)
     q = q.reshape(B, Sx, K, G, hd)
     scale = hd ** -0.5
     scores = jnp.einsum("bskgd,btkd->bkgst", q,
                         cache["k"].astype(x.dtype)) * scale
     scores = scores.astype(jnp.float32)
     tok = cache["tok"]                                              # [B,C]
-    valid = (tok[:, None, :] >= 0) & (tok[:, None, :] <= positions[:, :, None])
+    # distinct name from the `valid` lane mask: this is the [B,Sx,C]
+    # which-cache-slots-may-each-query-attend mask
+    attendable = ((tok[:, None, :] >= 0)
+                  & (tok[:, None, :] <= positions[:, :, None]))
     if window is not None:
-        valid = valid & (tok[:, None, :] > positions[:, :, None] - window)
-    scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
+        attendable = attendable & (tok[:, None, :]
+                                   > positions[:, :, None] - window)
+    scores = jnp.where(attendable[:, None, None, :, :], scores, NEG_INF)
     prob = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bkgst,btkd->bskgd", prob,
                      cache["v"].astype(x.dtype)).reshape(B, Sx, H, hd)
@@ -467,11 +514,12 @@ def attention_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
 
 
 def attn_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
-                      pos0: jax.Array, kind: str = "attn"
+                      pos0: jax.Array, kind: str = "attn",
+                      valid: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, Dict]:
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     y, cache = attention_extend(cfg, p["attn"], h, cache, pos0,
-                                block_window(cfg, kind))
+                                block_window(cfg, kind), valid)
     x = x + y
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     return x + L.mlp(p["mlp"], h, cfg.mlp_act), cache

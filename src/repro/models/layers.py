@@ -71,6 +71,25 @@ def abstract_params(defs: PyTree) -> PyTree:
         lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def)
 
 
+def conv_tail_at(hist: jax.Array, n_valid: jax.Array, ck: int) -> jax.Array:
+    """Gather the ck-1 causal-conv history entries ending at each row's
+    last valid token (masked recurrent extends).  hist: [B, (ck-1)+S];
+    returns [B, ck-1].  Shared by the mamba and RG-LRU mixers."""
+    idx = n_valid[:, None] + jnp.arange(ck - 1)[None, :]   # [B, ck-1]
+    return jnp.take_along_axis(hist, idx[:, :, None], axis=1)
+
+
+def init_empty_cache(defs: PyTree) -> PyTree:
+    """Materialize a decode-cache def tree in its EMPTY state: zeros
+    everywhere except ``tok`` leaves, which hold -1 (= no token cached).
+    The single source of this recipe for models, engine, and tests."""
+    cache = init_params(defs, jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: (jnp.full_like(x, -1)
+                         if any(getattr(k, "key", None) == "tok"
+                                for k in path) else x), cache)
+
+
 def param_count(defs: PyTree) -> int:
     import numpy as np
     return int(sum(np.prod(d.shape) for d in tree_defs(defs)))

@@ -93,24 +93,37 @@ def _chunked_scan(a: jax.Array, b: jax.Array, h0: jax.Array):
     return hs, h_last
 
 
-def _selective_scan(cfg: ModelConfig, p: Dict, xc: jax.Array, h0=None):
+def _selective_scan(cfg: ModelConfig, p: Dict, xc: jax.Array, h0=None,
+                    valid=None):
     """Chunked selective scan: the [B,chunk,d_inner,state] working set is
     materialized one time-chunk at a time (dt/B/C projections happen
-    *inside* the chunk loop).  Returns (y [B,S,di] f32, h_last)."""
+    *inside* the chunk loop).  Returns (y [B,S,di] f32, h_last).
+
+    ``valid`` ([B, S] bool) masks the recurrence to identity (a=1, b=0) on
+    pad lanes, so h_last is exactly the state after the last valid token —
+    the mechanism that lets chunked serving prefill batch rows of unequal
+    length without baking pads into recurrent state."""
     B, S, di = xc.shape
     chunk = min(SCAN_CHUNK, S)
     if S % chunk:
         chunk = S
     nc = S // chunk
     xcc = xc.reshape(B, nc, chunk, di).swapaxes(0, 1)      # [nc,B,chunk,di]
+    vcc = (None if valid is None
+           else valid.reshape(B, nc, chunk).swapaxes(0, 1))
 
     def combine(u, w):
         a1, b1 = u
         a2, b2 = w
         return a1 * a2, a2 * b1 + b2
 
-    def step(h, xck):
+    def step(h, xs):
+        xck, vck = xs
         a, b, Cmat = _ssm_params(cfg, p, xck)              # [B,chunk,di,st]
+        if vck is not None:
+            m = vck[:, :, None, None]
+            a = jnp.where(m, a, 1.0)
+            b = jnp.where(m, b, 0.0)
         aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
         hs = aa * h[:, None] + bb
         y = jnp.einsum("bsdn,bsn->bsd", hs, Cmat.astype(jnp.float32))
@@ -118,26 +131,38 @@ def _selective_scan(cfg: ModelConfig, p: Dict, xc: jax.Array, h0=None):
 
     if h0 is None:
         h0 = jnp.zeros((B, di, cfg.ssm_state), jnp.float32)
-    h_last, ys = jax.lax.scan(step, h0, xcc)
+    h_last, ys = jax.lax.scan(step, h0, (xcc, vcc))
     y = ys.swapaxes(0, 1).reshape(B, S, di)
     return y, h_last
 
 
 def mamba_mixer(cfg: ModelConfig, p: Dict, x: jax.Array,
-                return_state: bool = False, init_state: Dict = None):
-    """x: [B, S, d] -> y: [B, S, d] (+ final {conv, h} state)."""
+                return_state: bool = False, init_state: Dict = None,
+                valid=None):
+    """x: [B, S, d] -> y: [B, S, d] (+ final {conv, h} state).
+
+    ``valid`` ([B, S] bool trailing-pad mask) requires ``init_state`` and
+    makes pad lanes exact no-ops on the returned state (chunked serving
+    prefill)."""
     dt_ = x.dtype
     xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
     xb, z = jnp.split(xz, 2, axis=-1)                      # [B,S,di] each
     conv0 = init_state["conv"] if init_state is not None else None
     h0 = init_state["h"] if init_state is not None else None
     xc = _causal_conv(cfg, p, xb, conv0)
-    y, h_last = _selective_scan(cfg, p, xc, h0)
+    y, h_last = _selective_scan(cfg, p, xc, h0, valid=valid)
     y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
     y = y.astype(dt_) * jax.nn.silu(z)
     out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(dt_))
     if return_state:
         ck = cfg.ssm_conv
+        if valid is not None:
+            assert conv0 is not None, "masked mixer needs an init state"
+            hist = jnp.concatenate([conv0.astype(dt_), xb], axis=1)
+            conv_tail = (L.conv_tail_at(hist, jnp.sum(valid, axis=1), ck)
+                         if ck > 1 else
+                         jnp.zeros((x.shape[0], 0, cfg.d_inner), dt_))
+            return out, {"conv": conv_tail.astype(dt_), "h": h_last}
         hist = xb if conv0 is None else jnp.concatenate(
             [conv0.astype(dt_), xb], axis=1)
         if ck > 1:
@@ -200,8 +225,9 @@ def mamba_block_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict):
     return x + y, cache
 
 
-def mamba_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict):
+def mamba_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
+                       valid=None):
     """Continue the recurrence from a cached state over a token suffix."""
     y, state = mamba_mixer(cfg, p, L.rmsnorm(p["ln"], x, cfg.norm_eps),
-                           return_state=True, init_state=cache)
+                           return_state=True, init_state=cache, valid=valid)
     return x + y, state

@@ -46,9 +46,15 @@ def _capacity(cfg: ModelConfig, num_tokens: int) -> int:
     return max(8, -(-c // 8) * 8)
 
 
-def moe_ffn(cfg: ModelConfig, p: Dict, x: jax.Array
+def moe_ffn(cfg: ModelConfig, p: Dict, x: jax.Array,
+            valid: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, jax.Array]:
     """x: [B, S, d] (or [T, d]).  Returns (y, aux_loss).
+
+    ``valid`` ([B, S] bool) excludes pad lanes from dispatch entirely:
+    they are routed to a past-the-end expert id so they neither consume
+    expert capacity nor perturb valid tokens' outputs (chunked serving
+    prefill batches rows of unequal length).
 
     GROUPED sort-based dispatch (GShard groups = batch rows): every sort,
     prefix-sum and scatter is per-row, so with batch sharded over 'data'
@@ -64,8 +70,10 @@ def moe_ffn(cfg: ModelConfig, p: Dict, x: jax.Array
     # E * C_min slots per token — 384x waste on kimi-k2).
     if x.ndim == 3 and x.shape[1] >= 256:
         x3 = x
+        valid3 = valid
     else:
         x3 = x.reshape((1, -1, d))
+        valid3 = None if valid is None else valid.reshape((1, -1))
     B, S, _ = x3.shape
     E, k = cfg.num_experts, cfg.experts_per_token
     C = _capacity(cfg, S)
@@ -85,6 +93,11 @@ def moe_ffn(cfg: ModelConfig, p: Dict, x: jax.Array
     # ---- grouped sort-based dispatch -----------------------------------
     Tk = S * k
     flat_e = expert_ids.reshape(B, Tk)                     # [B, S*k]
+    if valid3 is not None:
+        # pad lanes route to a past-the-end expert id: zero one-hot counts,
+        # sorted last, dropped by the capacity test below.
+        lane_valid = jnp.repeat(valid3, k, axis=1)         # [B, S*k]
+        flat_e = jnp.where(lane_valid, flat_e, E)
     flat_gate = gate.reshape(B, Tk)
     order = jnp.argsort(flat_e, axis=1, stable=True)       # per-row sort
     s_expert = jnp.take_along_axis(flat_e, order, axis=1)
@@ -93,8 +106,8 @@ def moe_ffn(cfg: ModelConfig, p: Dict, x: jax.Array
     counts = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=1)
     starts = jnp.cumsum(counts, axis=1) - counts           # [B, E]
     pos_in_e = jnp.arange(Tk)[None, :] - jnp.take_along_axis(
-        starts, s_expert, axis=1)
-    keep = pos_in_e < C
+        starts, jnp.minimum(s_expert, E - 1), axis=1)
+    keep = (pos_in_e < C) & (s_expert < E)
     slot = jnp.where(keep, s_expert * C + pos_in_e, E * C)  # scratch slot
     bidx = jnp.arange(B)[:, None]
 
@@ -157,13 +170,13 @@ def moe_block_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
 
 
 def moe_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
-                     pos0: jax.Array):
+                     pos0: jax.Array, valid: Optional[jax.Array] = None):
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     y, cache = A.attention_extend(cfg, p["attn"], h, cache, pos0,
-                                  cfg.sliding_window)
+                                  cfg.sliding_window, valid)
     x = x + y
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-    y, _ = moe_ffn(cfg, p["moe"], h)
+    y, _ = moe_ffn(cfg, p["moe"], h, valid=valid)
     return x + y, cache
 
 

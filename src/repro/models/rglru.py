@@ -70,19 +70,31 @@ def _rg_gates(p, xc):
 
 
 def rglru_mixer(cfg: ModelConfig, p: Dict, x: jax.Array,
-                return_state: bool = False, init_state: Dict = None):
+                return_state: bool = False, init_state: Dict = None,
+                valid=None):
+    """``valid`` ([B, S] bool trailing-pad mask) requires ``init_state``
+    and masks the recurrence to identity on pad lanes, so the returned
+    state summarizes exactly the valid prefix (chunked serving prefill)."""
     dt_ = x.dtype
     xb = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(dt_))
     yb = jnp.einsum("bsd,dw->bsw", x, p["in_y"].astype(dt_))
     conv0 = init_state["conv"] if init_state is not None else None
     xc = _conv(p, xb, conv0)
     a, b = _rg_gates(p, xc)
+    if valid is not None:
+        a = jnp.where(valid[:, :, None], a, 1.0)
+        b = jnp.where(valid[:, :, None], b, 0.0)
     h0 = (init_state["h"] if init_state is not None
           else jnp.zeros((x.shape[0], cfg.lru_width), jnp.float32))
     hs, h_last = _chunked_scan(a, b, h0)
     y = hs.astype(dt_) * jax.nn.gelu(yb)
     out = jnp.einsum("bsw,wd->bsd", y, p["out"].astype(dt_))
     if return_state:
+        if valid is not None:
+            assert conv0 is not None, "masked mixer needs an init state"
+            hist = jnp.concatenate([conv0.astype(dt_), xb], axis=1)
+            tail = L.conv_tail_at(hist, jnp.sum(valid, axis=1), CONV_K)
+            return out, {"conv": tail.astype(dt_), "h": h_last}
         hist = xb if conv0 is None else jnp.concatenate(
             [conv0.astype(dt_), xb], axis=1)
         npad = max(0, (CONV_K - 1) - hist.shape[1])
@@ -141,9 +153,10 @@ def rglru_block_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict):
     return x + L.mlp(p["mlp"], h, cfg.mlp_act), cache
 
 
-def rglru_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict):
+def rglru_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
+                       valid=None):
     y, state = rglru_mixer(cfg, p, L.rmsnorm(p["ln"], x, cfg.norm_eps),
-                           return_state=True, init_state=cache)
+                           return_state=True, init_state=cache, valid=valid)
     x = x + y
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     return x + L.mlp(p["mlp"], h, cfg.mlp_act), state

@@ -120,16 +120,9 @@ class TransformerLM:
                                           seq_shard) for k in self.tail),
         }
 
-    def init_cache(self, batch: int, max_seq: int) -> PyTree:
-        defs = self.cache_defs(batch, max_seq)
-        cache = L.init_params(defs, jax.random.PRNGKey(0))
-        # tok slots must start at -1 (empty), not 0
-        def fix(path, x):
-            return x
-        return jax.tree_util.tree_map_with_path(
-            lambda path, x: (jnp.full_like(x, -1)
-                             if any(getattr(k, "key", None) == "tok"
-                                    for k in path) else x), cache)
+    def init_cache(self, batch: int, max_seq: int,
+                   seq_shard: bool = True) -> PyTree:
+        return L.init_empty_cache(self.cache_defs(batch, max_seq, seq_shard))
 
     # ---------------- activation sharding ---------------------------------
 
@@ -202,16 +195,16 @@ class TransformerLM:
             return RG.rglru_block_decode(cfg, p, x, cache)
         raise ValueError(kind)
 
-    def _apply_block_extend(self, kind: str, p, x, cache, pos0):
+    def _apply_block_extend(self, kind: str, p, x, cache, pos0, valid=None):
         cfg = self.cfg
         if kind in ("attn", "rg_attn"):
-            return A.attn_block_extend(cfg, p, x, cache, pos0, kind)
+            return A.attn_block_extend(cfg, p, x, cache, pos0, kind, valid)
         if kind == "moe":
-            return MOE.moe_block_extend(cfg, p, x, cache, pos0)
+            return MOE.moe_block_extend(cfg, p, x, cache, pos0, valid)
         if kind == "mamba":
-            return M.mamba_block_extend(cfg, p, x, cache)
+            return M.mamba_block_extend(cfg, p, x, cache, valid)
         if kind == "rglru":
-            return RG.rglru_block_extend(cfg, p, x, cache)
+            return RG.rglru_block_extend(cfg, p, x, cache, valid)
         raise ValueError(kind)
 
     # ---------------- forward (teacher forcing) ----------------------------
@@ -304,20 +297,34 @@ class TransformerLM:
     # ---------------- prefix extension (prompt caching) --------------------
 
     def prefill_extend(self, params: PyTree, cache: PyTree, tokens: jax.Array,
-                       pos0: jax.Array) -> Tuple[jax.Array, PyTree]:
+                       pos0: jax.Array,
+                       n_valid: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, PyTree]:
         """Prefill a token SUFFIX on top of a cached prefix.
 
         tokens: [B, Sx] continue at absolute position pos0 [B].  Returns
         (last-token logits [B,V], updated cache).  This is what makes a
         reflection round's prefill cost proportional to the suffix only.
+
+        ``n_valid`` ([B] int) turns this into the serving engine's MIXED
+        chunked-prefill/decode step: row b processes only its first
+        n_valid[b] lanes (0 = complete no-op for that row's cache), and the
+        returned logits are taken at each row's last valid lane.  Pad lanes
+        never reach the KV cache, recurrent state, or MoE dispatch, so a
+        prompt split into arbitrary chunks reproduces monolithic prefill
+        exactly — including for recurrent models, whose states must
+        summarize precisely the processed prefix.
         """
         x = self.embed(params, tokens)
+        valid = None
+        if n_valid is not None:
+            valid = jnp.arange(tokens.shape[1])[None, :] < n_valid[:, None]
 
         def unit_body(x, payload):
             unit_params, unit_caches = payload
             new_caches = []
             for kind, p, c in zip(self.unit, unit_params, unit_caches):
-                x, c = self._apply_block_extend(kind, p, x, c, pos0)
+                x, c = self._apply_block_extend(kind, p, x, c, pos0, valid)
                 new_caches.append(c)
             return x, tuple(new_caches)
 
@@ -328,10 +335,15 @@ class TransformerLM:
             x, scan_caches = unit_body(x, (params["scan"], cache["scan"]))
         tail_caches = []
         for kind, p, c in zip(self.tail, params["tail"], cache["tail"]):
-            x, c = self._apply_block_extend(kind, p, x, c, pos0)
+            x, c = self._apply_block_extend(kind, p, x, c, pos0, valid)
             tail_caches.append(c)
         x = L.rmsnorm(params["ln_f"], x, self.cfg.norm_eps)
-        logits = self.unembed(params, x[:, -1])
+        if n_valid is None:
+            logits = self.unembed(params, x[:, -1])
+        else:
+            last = jnp.take_along_axis(
+                x, jnp.maximum(n_valid - 1, 0)[:, None, None], axis=1)[:, 0]
+            logits = self.unembed(params, last)
         return logits, {"scan": scan_caches, "tail": tuple(tail_caches)}
 
     # ---------------- decode -----------------------------------------------

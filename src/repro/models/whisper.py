@@ -204,16 +204,21 @@ class WhisperModel:
         return logits, {"self": self_kv, "cross": cross}
 
     def prefill_extend(self, params: PyTree, cache: PyTree, tokens: jax.Array,
-                       pos0: jax.Array):
+                       pos0: jax.Array, n_valid: Optional[jax.Array] = None):
         """Extend the decoder with a token suffix; cross KV is reused as-is
-        (the enc-dec best case for reflection-round prompt caching)."""
+        (the enc-dec best case for reflection-round prompt caching).
+        ``n_valid`` selects the chunked/masked path (see TransformerLM)."""
         cfg = self.cfg
         x = params["embed"].astype(self.dtype)[tokens]
+        valid = None
+        if n_valid is not None:
+            valid = jnp.arange(tokens.shape[1])[None, :] < n_valid[:, None]
 
         def body(x, payload):
             p, self_c, cross_c = payload
             h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
-            y, self_c = A.attention_extend(cfg, p["attn"], h, self_c, pos0, None)
+            y, self_c = A.attention_extend(cfg, p["attn"], h, self_c, pos0,
+                                           None, valid)
             x = x + y
             h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
             x = x + cross_attention(cfg, p["xattn"], h,
@@ -225,7 +230,12 @@ class WhisperModel:
         x, self_kv = jax.lax.scan(
             body, x, (params["dec"], cache["self"], cache["cross"]))
         x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
-        logits = self.unembed(params, x[:, -1])
+        if n_valid is None:
+            last = x[:, -1]
+        else:
+            last = jnp.take_along_axis(
+                x, jnp.maximum(n_valid - 1, 0)[:, None, None], axis=1)[:, 0]
+        logits = self.unembed(params, last)
         return logits, {"self": self_kv, "cross": cache["cross"]}
 
     def decode_step(self, params: PyTree, cache: PyTree, tokens: jax.Array,

@@ -5,19 +5,32 @@ The paper's three levers are first-class here:
     same conversation_id; prefix caching makes each round's prefill cost
     proportional to its suffix (Appendix B.4);
   * prompt caching — serving/prefix_cache.py snapshots the per-layer
-    decode cache at round completion;
+    decode cache at round completion AND at page-aligned chunk boundaries
+    mid-prefill;
   * budget tuning — BudgetTier caps decode steps (thinking budgets).
 
-Decode runs continuously batched across slots; prefill/extension run
-per-request (CPU demo scale; production would chunk prefills into the
-decode batch).  Per-request token accounting is Bedrock-compatible so the
-paper's cost analysis reproduces.
+Scheduling is CHUNKED-PREFILL CONTINUOUS BATCHING (docs/SERVING.md):
+prompts and reflection-round prefix-cache suffix extensions are split
+into fixed-width chunks and interleaved with in-flight decode tokens in
+a SINGLE jitted mixed step — ``model.prefill_extend(..., n_valid)`` — so
+a long arriving prompt never stalls decoding rows.  A per-step token
+budget (``ServeConfig.prefill_token_budget``) bounds how much prefill
+work rides along with each decode step, which is what bounds tail
+decode-step latency.  Validity masking inside the mixed step keeps pad
+lanes out of KV caches, recurrent state, and MoE dispatch, so chunked
+prefill is exact for every block kind — including SSM/RG-LRU stages,
+whose state must summarize precisely the processed prefix (the old
+per-request path had to prefill recurrent models at exact length; the
+mask preserves that invariant inside a batched step).  When no prefill
+is pending, the engine takes the dedicated single-token decode path.
+
+Per-request token accounting is Bedrock-compatible so the paper's cost
+analysis reproduces.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +44,6 @@ from repro.serving.request import BudgetTier, Request, Status, TokenUsage
 
 PyTree = Any
 
-PREFILL_BUCKET = 16
 RECURRENT_KINDS = {"mamba", "rglru"}
 
 
@@ -47,40 +59,82 @@ class Engine:
         recurrent = bool(kinds & RECURRENT_KINDS)
         self.prefix_cache = (PrefixCache(scfg.page_size, recurrent=recurrent)
                              if scfg.prefix_cache else None)
-        # Recurrent states summarize EVERY processed token, so padded
-        # prefill would bake pad tokens into the state snapshot — those
-        # models prefill at exact length (one compile per length).
-        self.prefill_bucket = 1 if recurrent else PREFILL_BUCKET
+        # Mixed-step lane width: besides max_seq, it must never exceed the
+        # smallest attention ring capacity — with more lanes than slots a
+        # chunk would overwrite ring entries BEFORE its own lanes attend
+        # to them ("last-wins" aliasing), silently breaking exactness.
+        cap = S
+        if hasattr(model, "attn_capacity"):
+            cap = min(cap, model.attn_capacity(S))
+        if "rg_attn" in kinds:
+            cap = min(cap, self.cfg.local_window)
+        self.chunk = max(1, min(scfg.prefill_chunk, cap))
+        # Per-step fresh-prefill token budget.
+        self.prefill_budget = max(1, scfg.prefill_token_budget)
 
         # batched decode cache (tok slots start empty = -1)
         defs = model.cache_defs(B, S, seq_shard=False)
         self.cache_defs = defs
-        cache = L.init_params(defs, jax.random.PRNGKey(0))
-        self.cache = jax.tree_util.tree_map_with_path(
-            lambda path, x: (jnp.full_like(x, -1)
-                             if any(getattr(k, "key", None) == "tok"
-                                    for k in path) else x), cache)
+        self.cache = L.init_empty_cache(defs)
+        # pristine single-row cache: admission resets a slot with this so
+        # no stale ring-buffer entries of the previous occupant survive
+        self._blank_row = L.init_empty_cache(
+            model.cache_defs(1, S, seq_shard=False))
 
         self.slots: List[Optional[Request]] = [None] * B
         self.pos = np.zeros(B, np.int64)
         self.next_token = np.zeros(B, np.int64)
         self.queue: deque[Request] = deque()
+        # uid -> request for queued/in-flight only (pruned at completion
+        # so a long-running server does not retain every request ever);
+        # finished is a bounded notification buffer drained by poll()
+        self.requests: Dict[int, Request] = {}
+        self.finished: deque[Request] = deque(maxlen=max(64, 16 * B))
         self.rng = jax.random.PRNGKey(scfg.seed)
+        self._ff_version = -1   # prefix-cache version at last fast-forward
+        self._admit_counter = 0
         self.model_steps = {"prefill_tokens": 0, "extend_tokens": 0,
-                            "decode_steps": 0, "decode_batch_steps": 0}
+                            "decode_steps": 0, "decode_batch_steps": 0,
+                            "mixed_steps": 0, "prefill_chunks": 0,
+                            "max_step_prefill_tokens": 0}
 
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
-        self._prefill = jax.jit(
-            lambda p, t, l: model.prefill(p, t, lengths=l, max_seq=S))
-        self._extend = jax.jit(model.prefill_extend, donate_argnums=(1,))
+        self._mixed = jax.jit(
+            lambda p, c, t, pos0, nv: model.prefill_extend(
+                p, c, t, pos0, n_valid=nv),
+            donate_argnums=(1,))
 
     # ------------------------------------------------------------------ API
 
     def submit(self, req: Request) -> int:
+        """Enqueue a request (non-blocking).  Returns its uid for poll()."""
         self.queue.append(req)
+        self.requests[req.uid] = req
         return req.uid
 
+    def poll(self, uid: Optional[int] = None
+             ) -> Union[Status, List[Request]]:
+        """One cooperative scheduler tick.
+
+        With ``uid``: advance the engine one step (if it has work) and
+        return that request's status.  Without: advance one step and
+        return the requests that finished during it.  Callers loop on
+        poll() instead of blocking in run() — this is what lets a
+        reflection controller interleave rounds of many conversations.
+        """
+        self.step()
+        if uid is not None:
+            req = self.requests.get(uid)
+            # completed requests are pruned from the registry; an unknown
+            # uid here was either never submitted (caller bug surfaces as
+            # DONE-without-output) or already finished
+            return req.status if req is not None else Status.DONE
+        done = list(self.finished)
+        self.finished.clear()
+        return done
+
     def run(self, max_steps: int = 100_000) -> None:
+        """Drive the scheduler until fully idle (blocking convenience)."""
         for _ in range(max_steps):
             if not self.step():
                 break
@@ -112,56 +166,31 @@ class Engine:
         self.cache = jax.tree_util.tree_map(put, self.cache, c1,
                                             self.cache_defs)
 
-    def _start(self, req: Request, slot: int) -> None:
+    def _admit(self, req: Request, slot: int) -> None:
+        """Assign a queued request to a free slot.  No model work happens
+        here — prefill is chunked into subsequent mixed steps."""
         prompt = req.prompt
         assert len(prompt) + self._budget_cap(req) < self.scfg.max_seq, \
             "request would overflow max_seq"
-        cached_len, cache1, kind = 0, None, "miss"
+        cached_len, cache1 = 0, None
         if self.prefix_cache is not None:
             res = self.prefix_cache.lookup(prompt)
             # a full-prompt hit still needs >=1 suffix token for logits
             cached_len = min(res.cached_len, len(prompt) - 1)
             if cached_len > 0:
-                cache1, kind = res.cache, res.kind
-
+                cache1 = res.cache
         if cache1 is not None:
-            suffix = jnp.asarray([prompt[cached_len:]], jnp.int32)
-            logits, cache1 = self._extend(
-                self.params, cache1, suffix,
-                jnp.full((1,), cached_len, jnp.int32))
-            self.model_steps["extend_tokens"] += len(prompt) - cached_len
-            req.usage += TokenUsage(input_tokens=len(prompt) - cached_len,
-                                    cache_read_tokens=cached_len,
-                                    cache_write_tokens=len(prompt) - cached_len)
+            self._set_slot_cache(slot, cache1)
+            req.usage += TokenUsage(cache_read_tokens=cached_len)
         else:
-            padded = len(prompt)
-            if padded % self.prefill_bucket:
-                padded += self.prefill_bucket - padded % self.prefill_bucket
-            toks = np.zeros((1, padded), np.int32)
-            toks[0, :len(prompt)] = prompt
-            logits, cache1 = self._prefill(
-                self.params, jnp.asarray(toks),
-                jnp.asarray([len(prompt)], jnp.int32))
-            self.model_steps["prefill_tokens"] += len(prompt)
-            req.usage += TokenUsage(input_tokens=len(prompt),
-                                    cache_write_tokens=len(prompt))
-        req.prefill_steps += 1
-
-        if self.prefix_cache is not None:
-            # snapshot immediately after prefill: concurrent requests with
-            # the same prompt (best-of-N, judge fan-out) hit right away
-            self.prefix_cache.insert(list(prompt), cache1)
-
-        self._set_slot_cache(slot, cache1)
-        self.rng, k = jax.random.split(self.rng)
-        tok = int(sampler.sample(logits[0], k, req.temperature))
-        req.output.append(tok)
-        req.usage.output_tokens += 1
-        req.status = Status.DECODING
+            cached_len = 0
+            self._set_slot_cache(slot, self._blank_row)
+        req.prefill_pos = cached_len
+        req.cached_len = cached_len
+        req.status = Status.PREFILLING
+        self._admit_counter += 1
+        req.admit_seq = self._admit_counter
         self.slots[slot] = req
-        self.pos[slot] = len(prompt)
-        self.next_token[slot] = tok
-        self._maybe_finish(slot)
 
     def _maybe_finish(self, slot: int) -> None:
         req = self.slots[slot]
@@ -176,6 +205,8 @@ class Engine:
         else:
             return
         req.status = Status.DONE
+        self.finished.append(req)
+        self.requests.pop(req.uid, None)
         if self.prefix_cache is not None:
             # snapshot the conversation INCLUDING the token just produced:
             # its KV was written during the decode step that produced the
@@ -186,31 +217,158 @@ class Engine:
                 self.prefix_cache.insert(convo, self._slot_cache(slot))
         self.slots[slot] = None
 
+    def _sample_rows(self, logits: jax.Array) -> np.ndarray:
+        """One batched sampling call for every row (greedy rows ignore
+        the rng; rows without a request are discarded by the caller)."""
+        temps = np.zeros(len(self.slots), np.float32)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                temps[i] = r.temperature
+        self.rng, k = jax.random.split(self.rng)
+        return np.asarray(sampler.sample_batch(logits, k, jnp.asarray(temps)))
+
+    def _fast_forward(self) -> None:
+        """In-flight prefix sharing: a PREFILLING slot jumps ahead when a
+        longer usable prefix snapshot has appeared since its admission —
+        e.g. a concurrent identical-prompt request (best-of-N, judge
+        fan-out) publishing chunk-boundary snapshots mid-flight.  Skipped
+        entirely when no insert happened since the last scan, keeping the
+        hot step path free of O(entries x prompt) prefix scans."""
+        if self.prefix_cache is None:
+            return
+        if self.prefix_cache.version == self._ff_version:
+            return
+        self._ff_version = self.prefix_cache.version
+        for slot, req in enumerate(self.slots):
+            if req is None or req.status is not Status.PREFILLING:
+                continue
+            if req.prefill_pos >= len(req.prompt) - 1:
+                continue                  # last token must be processed live
+            res = self.prefix_cache.lookup(req.prompt,
+                                           min_len=req.prefill_pos,
+                                           record_miss=False)
+            cached = min(res.cached_len, len(req.prompt) - 1)
+            if res.cache is not None and cached > req.prefill_pos:
+                self._set_slot_cache(slot, res.cache)
+                req.usage += TokenUsage(
+                    cache_read_tokens=cached - req.prefill_pos)
+                req.prefill_pos = cached
+                req.cached_len = cached
+
+    def _plan_chunks(self) -> Dict[int, int]:
+        """Token-budget admission of prefill work into this step: each
+        PREFILLING slot gets min(chunk, remaining, budget-left) lanes,
+        oldest admission first — so a request can never be starved by
+        newer arrivals landing in lower-numbered slots."""
+        plan: Dict[int, int] = {}
+        budget = self.prefill_budget
+        waiting = sorted(
+            (i for i, r in enumerate(self.slots)
+             if r is not None and r.status is Status.PREFILLING),
+            key=lambda i: self.slots[i].admit_seq)
+        for slot in waiting:
+            if budget <= 0:
+                break
+            n = min(self.chunk, self.slots[slot].prefill_remaining, budget)
+            if n > 0:
+                plan[slot] = n
+                budget -= n
+        return plan
+
+    def _postprocess_prefill(self, slot: int, n: int,
+                             sampled: np.ndarray) -> None:
+        req = self.slots[slot]
+        req.prefill_pos += n
+        req.prefill_chunks += 1
+        req.prefill_steps += 1
+        self.model_steps["prefill_chunks"] += 1
+        if req.cached_len > 0:
+            self.model_steps["extend_tokens"] += n
+        else:
+            self.model_steps["prefill_tokens"] += n
+        req.usage += TokenUsage(input_tokens=n, cache_write_tokens=n)
+        if req.prefill_remaining == 0:
+            # prompt fully in cache: the mixed step's last-valid logits
+            # are the next-token distribution — sample the first token
+            tok = int(sampled[slot])
+            req.output.append(tok)
+            req.usage.output_tokens += 1
+            req.status = Status.DECODING
+            self.pos[slot] = len(req.prompt)
+            self.next_token[slot] = tok
+            if self.prefix_cache is not None:
+                self.prefix_cache.insert(list(req.prompt),
+                                         self._slot_cache(slot))
+            self._maybe_finish(slot)
+        elif (self.prefix_cache is not None and self.scfg.cache_prefill_chunks
+              and self.prefix_cache.wants_boundary(
+                  req.prompt[:req.prefill_pos])):
+            self.prefix_cache.insert_boundary(
+                list(req.prompt[:req.prefill_pos]), self._slot_cache(slot))
+
+    def _postprocess_decode(self, slot: int, sampled: np.ndarray) -> None:
+        req = self.slots[slot]
+        tok = int(sampled[slot])
+        req.output.append(tok)
+        req.usage.output_tokens += 1
+        req.decode_steps += 1
+        self.pos[slot] += 1
+        self.next_token[slot] = tok
+        self._maybe_finish(slot)
+
     def step(self) -> bool:
         """One scheduler tick.  Returns False when fully idle."""
-        # admit queued requests into free slots
+        # admit queued requests into free slots (no model work yet)
         for slot in range(len(self.slots)):
             if self.slots[slot] is None and self.queue:
-                self._start(self.queue.popleft(), slot)
+                self._admit(self.queue.popleft(), slot)
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return bool(self.queue)
 
-        tokens = jnp.asarray(self.next_token[:, None], jnp.int32)
-        pos = jnp.asarray(self.pos, jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
-        self.model_steps["decode_batch_steps"] += 1
-        self.model_steps["decode_steps"] += len(active)
+        decode_rows = [i for i in active
+                       if self.slots[i].status is Status.DECODING]
+        self._fast_forward()
+        plan = self._plan_chunks()
 
-        logits_np = None
-        for slot in active:
+        if not plan:
+            # decode fast path: dedicated [B, 1] step, no masked lanes
+            tokens = jnp.asarray(self.next_token[:, None], jnp.int32)
+            pos = jnp.asarray(self.pos, jnp.int32)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              tokens, pos)
+            self.model_steps["decode_batch_steps"] += 1
+            self.model_steps["decode_steps"] += len(decode_rows)
+            sampled = self._sample_rows(logits)
+            for slot in decode_rows:
+                self._postprocess_decode(slot, sampled)
+            return True
+
+        # mixed step: decode rows ride in lane 0; prefill rows get chunks
+        B, W = len(self.slots), self.chunk
+        toks = np.zeros((B, W), np.int32)
+        pos0 = np.zeros(B, np.int32)
+        nv = np.zeros(B, np.int32)
+        for slot in decode_rows:
+            toks[slot, 0] = self.next_token[slot]
+            pos0[slot] = self.pos[slot]
+            nv[slot] = 1
+        for slot, n in plan.items():
             req = self.slots[slot]
-            self.rng, k = jax.random.split(self.rng)
-            tok = int(sampler.sample(logits[slot], k, req.temperature))
-            req.output.append(tok)
-            req.usage.output_tokens += 1
-            req.decode_steps += 1
-            self.pos[slot] += 1
-            self.next_token[slot] = tok
-            self._maybe_finish(slot)
+            toks[slot, :n] = req.prompt[req.prefill_pos:req.prefill_pos + n]
+            pos0[slot] = req.prefill_pos
+            nv[slot] = n
+        logits, self.cache = self._mixed(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos0),
+            jnp.asarray(nv))
+        self.model_steps["mixed_steps"] += 1
+        self.model_steps["decode_steps"] += len(decode_rows)
+        self.model_steps["max_step_prefill_tokens"] = max(
+            self.model_steps["max_step_prefill_tokens"],
+            int(sum(plan.values())))
+        sampled = self._sample_rows(logits)
+        for slot, n in plan.items():
+            self._postprocess_prefill(slot, n, sampled)
+        for slot in decode_rows:
+            self._postprocess_decode(slot, sampled)
         return True

@@ -12,7 +12,15 @@ prefix-matches a new prompt:
     page-aligned boundary <= p (tok indices beyond the cut are masked to
     -1).  Recurrent state summarizes the entire stored prefix, so partial
     reuse is structurally impossible for SSM/hybrid stages — the trie
-    enforces exact-boundary semantics for them (DESIGN.md §4).
+    enforces exact-boundary semantics for them (docs/SERVING.md).
+
+Besides round-completion snapshots, the chunked-prefill scheduler inserts
+PARTIAL-PREFIX snapshots at page-aligned chunk boundaries
+(``insert_boundary``): a request still mid-prefill already populates the
+cache, so concurrent same-prompt requests (best-of-N, judge fan-out) hit
+before the first request finishes.  Boundary entries are exact-boundary
+full entries — they summarize precisely the tokens processed so far — so
+they are safe for recurrent models too.
 """
 from __future__ import annotations
 
@@ -74,30 +82,50 @@ class PrefixCache:
         self.max_entries = max_entries
         self.recurrent = recurrent       # model has mamba/rglru stages
         self.entries: Dict[Tuple[int, ...], Entry] = {}
+        self.version = 0        # bumped on insert; lets pollers skip scans
         self.stats = {"hits": 0, "partial_hits": 0, "misses": 0,
-                      "evictions": 0, "tokens_saved": 0}
+                      "evictions": 0, "tokens_saved": 0,
+                      "boundary_snapshots": 0}
 
-    def lookup(self, tokens: List[int]) -> LookupResult:
+    def lookup(self, tokens: List[int], min_len: int = 0,
+               record_miss: bool = True) -> LookupResult:
+        """Longest usable stored prefix of ``tokens``.
+
+        ``min_len``: only return (and only count in stats) an entry
+        strictly longer than this — the engine's in-flight fast-forward
+        passes its current prefill progress (with ``record_miss=False``)
+        so repeated per-tick polling does not inflate the statistics.
+        """
         key = tuple(tokens)
         best: Optional[Tuple[int, Entry, str]] = None
         for k, e in self.entries.items():
             p = _common_prefix(key, k)
             if p == len(k) and p > 0:
-                # stored sequence is itself a prefix of the new prompt
+                # stored sequence is itself a prefix of the new prompt.
+                # Recurrent caches: an EXACT-length match is unusable —
+                # generation needs the last prompt token processed live,
+                # but the stored state already summarizes it; replaying it
+                # would double-count it in the recurrence.  (Attention
+                # caches are fine: the ring rewrite is idempotent.)
+                if self.recurrent and p == len(key):
+                    continue
                 if best is None or p > best[0]:
                     best = (p, e, "full")
             elif not self.recurrent and p >= self.page_size:
                 cut = (p // self.page_size) * self.page_size
                 if best is None or cut > best[0]:
                     best = (cut, e, "partial")
+        if best is not None and best[0] <= min_len:
+            return LookupResult(0, None, "miss")
         if best is None:
-            self.stats["misses"] += 1
+            if record_miss:
+                self.stats["misses"] += 1
             return LookupResult(0, None, "miss")
         plen, entry, kind = best
         entry.last_used = time.monotonic()
         entry.hits += 1
         self.stats["hits" if kind == "full" else "partial_hits"] += 1
-        self.stats["tokens_saved"] += plen
+        self.stats["tokens_saved"] += plen - min_len
         cache = entry.cache
         if kind == "partial":
             cache = truncate_attention_cache(cache, plen)
@@ -108,6 +136,7 @@ class PrefixCache:
 
     def insert(self, tokens: List[int], cache: PyTree) -> None:
         key = tuple(tokens)
+        self.version += 1
         if key in self.entries:
             self.entries[key].cache = cache
             self.entries[key].last_used = time.monotonic()
@@ -117,6 +146,20 @@ class PrefixCache:
             del self.entries[victim.tokens]
             self.stats["evictions"] += 1
         self.entries[key] = Entry(key, cache)
+
+    def wants_boundary(self, tokens: List[int]) -> bool:
+        """Should the engine snapshot this partial prefix?  Page-aligned
+        boundaries only, and never one that is already stored — the caller
+        checks this BEFORE slicing the slot cache out of the batch."""
+        return (len(tokens) > 0 and len(tokens) % self.page_size == 0
+                and tuple(tokens) not in self.entries)
+
+    def insert_boundary(self, tokens: List[int], cache: PyTree) -> None:
+        """Insert a mid-prefill partial-prefix snapshot (chunk boundary)."""
+        if tuple(tokens) in self.entries:
+            return                        # boundary already stored; keep LRU age
+        self.stats["boundary_snapshots"] += 1
+        self.insert(list(tokens), cache)
 
     @property
     def nbytes(self) -> int:

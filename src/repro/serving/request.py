@@ -11,6 +11,7 @@ _uid = itertools.count()
 
 class Status(Enum):
     QUEUED = "queued"
+    PREFILLING = "prefilling"   # admitted to a slot, chunks still pending
     DECODING = "decoding"
     DONE = "done"
     CANCELLED = "cancelled"
@@ -58,6 +59,16 @@ class Request:
     decode_steps: int = 0
     stop_reason: Optional[str] = None
 
+    # chunked-prefill scheduling state (owned by the engine)
+    prefill_pos: int = 0        # prompt tokens already in the slot cache
+    cached_len: int = 0         # prefix-cache hit length at admission
+    prefill_chunks: int = 0     # mixed-step chunks this request consumed
+    admit_seq: int = 0          # admission order (budget fairness key)
+
     @property
     def total_len(self) -> int:
         return len(self.prompt) + len(self.output)
+
+    @property
+    def prefill_remaining(self) -> int:
+        return len(self.prompt) - self.prefill_pos

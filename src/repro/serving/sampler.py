@@ -21,3 +21,21 @@ def sample(logits, key, temperature: float):
     if temperature <= 0.0:
         return greedy(logits)
     return sample_temperature(logits, key, jnp.float32(temperature))
+
+
+@jax.jit
+def sample_batch(logits: jax.Array, key: jax.Array,
+                 temperature: jax.Array) -> jax.Array:
+    """Sample one token per row in a single call.
+
+    logits: [B, V]; temperature: [B] (<= 0 means greedy for that row).
+    One jitted dispatch replaces the engine's former per-slot Python loop.
+    """
+    B = logits.shape[0]
+    keys = jax.random.split(key, B)
+    scaled = (logits.astype(jnp.float32)
+              / jnp.maximum(temperature, 1e-6)[:, None])
+    sampled = jax.vmap(
+        lambda k, l: jax.random.categorical(k, l, axis=-1))(keys, scaled)
+    return jnp.where(temperature > 0.0, sampled,
+                     jnp.argmax(logits, axis=-1)).astype(jnp.int32)

@@ -4,6 +4,7 @@ import math
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import quality_sim as QS

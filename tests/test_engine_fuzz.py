@@ -3,6 +3,7 @@ preserve the engine's core invariants (cache-identity, accounting
 conservation, completion)."""
 import jax
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.configs.base import ServeConfig

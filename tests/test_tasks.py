@@ -1,6 +1,7 @@
 """Synthetic task suites + the mini-SQL executor (the real feedback
 substrate), with hypothesis property tests on the executor."""
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.data.tasks import (make_math_tasks, make_sentiment_tasks,
