@@ -38,6 +38,15 @@ def run(verbose: bool = True):
     us = _time(ops.decode_attention, qd, kd, vd, tok, pos, interpret=True)
     rows.append(("kernel_decode_attention_256", us, "B2C256"))
 
+    # paged decode: same logical 256 tokens scattered over a 64-page pool
+    kp = jax.random.normal(ks[4], (64, 16, 2, 64), jnp.float32)
+    vp = jax.random.normal(ks[5], (64, 16, 2, 64), jnp.float32)
+    pt = jnp.stack([jnp.arange(16, dtype=jnp.int32),
+                    jnp.arange(16, 32, dtype=jnp.int32)])
+    us = _time(ops.paged_decode_attention, qd, kp, vp, pt, pos,
+               interpret=True)
+    rows.append(("kernel_paged_decode_attention_256", us, "B2P64ps16"))
+
     B, S, D, N = 1, 64, 128, 8
     dt = jax.nn.softplus(jax.random.normal(ks[6], (B, S, D))) * 0.1
     Bm = jax.random.normal(ks[7], (B, S, N))

@@ -23,6 +23,7 @@ MODULES = [
     "benchmarks.roofline",
     "benchmarks.engine_micro",
     "benchmarks.chunked_prefill",
+    "benchmarks.paged_kv",
     "benchmarks.kernels_micro",
 ]
 

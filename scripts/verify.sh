@@ -12,4 +12,7 @@ python -m pytest -x -q
 echo "== smoke: benchmarks/engine_micro.py =="
 python benchmarks/engine_micro.py
 
+echo "== smoke: benchmarks/paged_kv.py --smoke =="
+python benchmarks/paged_kv.py --smoke
+
 echo "verify: OK"

@@ -156,8 +156,23 @@ class TrainConfig:
 class ServeConfig:
     max_batch: int = 8
     max_seq: int = 2048
-    page_size: int = 256                   # prefix-cache page granularity
+    # One page granularity for the whole serving stack: KV page-pool pages
+    # AND prefix-cache snapshot boundaries (they must agree — snapshots pin
+    # whole pages).
+    page_size: int = 256
     prefix_cache: bool = True
+    # ---- paged KV cache (docs/SERVING.md) ---------------------------------
+    # Shared page pool + per-request page tables replacing the dense
+    # [B, C] ring caches: memory proportional to UNIQUE tokens (best-of-N
+    # fan-out and reflection rounds share physical prefix pages), O(1)
+    # zero-copy prompt-cache snapshots, preemption + requeue on
+    # exhaustion.  False restores the ring caches (A/B baseline; also the
+    # fallback for models without a paged cache layout, e.g. whisper).
+    paged_kv: bool = True
+    # Physical pages in the pool.  0 = auto: max_batch * ceil(max_seq /
+    # page_size) — enough that no request mix can deadlock; set lower to
+    # trade memory for preemptions, higher to keep more snapshots pinned.
+    num_pages: int = 0
     max_think_tokens_low: int = 1024       # paper's "low" thinking budget
     max_think_tokens_high: int = 4096      # paper's "high" thinking budget
     temperature: float = 0.0

@@ -13,6 +13,7 @@ import jax
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.paged_attention import paged_decode_attention as _paged
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
 
@@ -32,6 +33,15 @@ def decode_attention(q, k, v, tok, pos, *, window: Optional[int] = None,
                      bk: int = 128, interpret: Optional[bool] = None):
     interp = (not _on_tpu()) if interpret is None else interpret
     return _decode(q, k, v, tok, pos, window=window, bk=bk, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, page_table, pos, *,
+                           window: Optional[int] = None,
+                           interpret: Optional[bool] = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _paged(q, k_pool, v_pool, page_table, pos, window=window,
+                  interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("bd", "interpret"))

@@ -1,0 +1,118 @@
+"""Pallas TPU paged decode attention: one query token over a paged KV pool.
+
+  q:          [B, K, G, hd]        (single position, grouped-query layout)
+  k_pool:     [P, ps, K, hd]       (shared page pool, P physical pages)
+  v_pool:     [P, ps, K, hd]
+  page_table: [B, NP] int32        (logical page -> physical page, -1 = unmapped)
+  pos:        [B] int32            (current absolute position)
+  out:        [B, K, G, hd]
+
+Unlike the dense ring kernel (decode_attention.py) the KV for a request is
+scattered across non-contiguous pages of a pool shared by every request;
+the kernel walks the request's page table block-by-block.  The table is a
+SCALAR-PREFETCH operand (``pltpu.PrefetchScalarGridSpec``): its entries
+are available before the kernel body runs, so the k/v BlockSpec index
+maps resolve ``page_table[b, j]`` into the HBM page to DMA next — the
+gather never materializes a [B, NP*ps, ...] copy of the logical KV the
+way the XLA reference path does.
+
+Grid (B, K, NP) with the LAST axis sequential (TPU semantics): pages
+stream through VMEM while m/l/acc accumulators persist in scratch across
+the NP iterations; the final iteration writes out.  Unmapped pages
+(table entry -1) are clamped to page 0 for the DMA and masked out of the
+softmax, so rows shorter than NP pages cost only wasted bandwidth, never
+wrong results.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(pt_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, ps: int, np_: int,
+                  scale: float, window: Optional[int]):
+    b = pl.program_id(0)
+    j = pl.program_id(2)                                      # logical page
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale               # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)                    # [ps, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    pos = pos_ref[0, 0]
+    mapped = pt_ref[b, j] >= 0
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # [G, ps]
+    # absolute token index held by each slot of this logical page
+    t = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    valid = mapped & (t <= pos)
+    if window is not None:
+        valid = valid & (t > pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(j == np_ - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_new / jnp.maximum(l_new, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           page_table: jax.Array, pos: jax.Array,
+                           *, window: Optional[int] = None,
+                           interpret: bool = True) -> jax.Array:
+    """q: [B,K,G,hd]; k/v_pool: [P,ps,K,hd]; page_table: [B,NP]; pos: [B]."""
+    B, K, G, hd = q.shape
+    ps = k_pool.shape[1]
+    NP = page_table.shape[1]
+    scale = hd ** -0.5
+    kernel = functools.partial(_paged_kernel, ps=ps, np_=NP, scale=scale,
+                               window=window)
+    pos2 = pos[:, None].astype(jnp.int32)                     # [B,1]
+
+    def kv_map(b, h, j, pt):
+        # unmapped logical pages DMA physical page 0; the body masks them
+        return (jnp.maximum(pt[b, j], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, NP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, pt: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, 1), lambda b, h, j, pt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j, pt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q, k_pool, v_pool, pos2)

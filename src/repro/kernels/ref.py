@@ -43,6 +43,34 @@ def decode_attention_ref(q, k, v, tok, pos, *, window: Optional[int] = None):
     return o.astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, page_table, pos, *,
+                               window: Optional[int] = None):
+    """q: [B,K,G,hd]; k/v_pool: [P,ps,K,hd]; page_table: [B,NP]; pos: [B].
+
+    Gathers each request's pages into a dense logical [B, NP*ps, K, hd]
+    view and applies position masking — the allclose target for the
+    page-table-walking Pallas kernel.
+    """
+    B = q.shape[0]
+    ps = k_pool.shape[1]
+    NP = page_table.shape[1]
+    hd = q.shape[-1]
+    idx = jnp.maximum(page_table, 0)                          # [B,NP]
+    kg = k_pool[idx].reshape(B, NP * ps, *k_pool.shape[2:])
+    vg = v_pool[idx].reshape(B, NP * ps, *v_pool.shape[2:])
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, kg.astype(jnp.float32)) * hd ** -0.5
+    t = jnp.arange(NP * ps)[None, :]
+    mapped = jnp.repeat(page_table >= 0, ps, axis=1)
+    valid = mapped & (t <= pos[:, None])
+    if window is not None:
+        valid = valid & (t > pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, vg.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
 def mamba_scan_ref(dt, Bm, Cm, x, A, Dsk, h0):
     """Sequential reference for the selective scan."""
     B, S, D = dt.shape

@@ -238,6 +238,9 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        # older jax returns a per-partition list of dicts
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         hlo = hlo_analyze(compiled.as_text())
 
     chips = mesh_chips(mesh)

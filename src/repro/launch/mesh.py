@@ -16,20 +16,26 @@ ICI_BW = 50e9                     # per link, B/s
 HBM_BYTES = 16 * 1024 ** 3        # 16 GiB per chip
 
 
-def _auto(n):
-    from jax.sharding import AxisType
-    return (AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """jax.make_mesh grew an ``axis_types`` kwarg after 0.4.x; pass it only
+    when this jax has it (Auto is the default behaviour either way)."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1-device mesh for CPU tests/examples (same axis names)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return _make_mesh((1, 1), ("data", "model"))
 
 
 def mesh_chips(mesh) -> int:

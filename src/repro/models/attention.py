@@ -376,6 +376,143 @@ def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (vLLM-style shared page pool; docs/SERVING.md)
+# ---------------------------------------------------------------------------
+#
+# Layout per attention layer: ``{"kp": [P, ps, K, hd], "vp": [P, ps, K, hd]}``
+# — a POOL of P physical pages of ps tokens each, shared by every request.
+# There is no batch axis and no ``tok`` slot-index array: each request owns
+# a page table [NP] mapping logical page (position // ps) to a physical
+# page (-1 = unmapped), so a token's absolute position is explicit from its
+# (logical page, offset) coordinates and masking is pure position
+# arithmetic.  Writes are scatters into uniquely-owned pages (the serving
+# engine's copy-on-write invariant); reads gather the request's pages into
+# a dense logical view (XLA path) or walk the table page-by-page
+# (kernels/paged_attention.py).
+
+
+def paged_kv_cache_def(cfg: ModelConfig, num_pages: int, page_size: int,
+                       dtype) -> Dict:
+    """ShapeDtypeStruct-compatible page-pool spec for one attention layer.
+
+    The leading ``pages`` logical axis is how the serving engine recognises
+    pool leaves (no ``batch`` axis => shared across requests, snapshotted
+    by page reference instead of by value).
+    """
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "kp": L.ParamDef((num_pages, page_size, K, hd),
+                         ("pages", None, "kv_heads", None), dtype,
+                         init="zeros"),
+        "vp": L.ParamDef((num_pages, page_size, K, hd),
+                         ("pages", None, "kv_heads", None), dtype,
+                         init="zeros"),
+    }
+
+
+def _gather_pages(pool_leaf: jax.Array, page_table: jax.Array) -> jax.Array:
+    """[P, ps, ...] pool + [B, NP] table -> dense logical [B, NP*ps, ...].
+
+    Unmapped entries (-1) gather page 0; callers mask them by position.
+    """
+    idx = jnp.maximum(page_table, 0)
+    g = pool_leaf[idx]                                  # [B, NP, ps, ...]
+    B, NP, ps = g.shape[0], g.shape[1], g.shape[2]
+    return g.reshape(B, NP * ps, *pool_leaf.shape[2:])
+
+
+def _paged_write(pool: Dict, k: jax.Array, v: jax.Array, phys: jax.Array,
+                 off: jax.Array) -> Dict:
+    """Scatter K/V into pool pages.  phys/off: [B] or [B,Sx] (phys >= P
+    drops the write — the route for pad lanes and unmapped positions)."""
+    return {
+        "kp": pool["kp"].at[phys, off].set(k.astype(pool["kp"].dtype),
+                                           mode="drop"),
+        "vp": pool["vp"].at[phys, off].set(v.astype(pool["vp"].dtype),
+                                           mode="drop"),
+    }
+
+
+def attention_decode_paged(cfg: ModelConfig, p: Dict, x: jax.Array,
+                           pool: Dict, pos: jax.Array,
+                           page_table: jax.Array, window: Optional[int]
+                           ) -> Tuple[jax.Array, Dict]:
+    """One-token decode over the page pool.  x: [B,1,d]; pos: [B];
+    page_table: [B, NP] int32."""
+    B = x.shape[0]
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    P, ps = pool["kp"].shape[0], pool["kp"].shape[1]
+    NP = page_table.shape[1]
+    q, k, v = _qkv(cfg, p, x, pos[:, None])
+    lpage = jnp.clip(pos // ps, 0, NP - 1)
+    phys = jnp.take_along_axis(page_table, lpage[:, None], axis=1)[:, 0]
+    phys = jnp.where(phys >= 0, phys, P)                # unmapped -> dropped
+    pool = _paged_write(pool, k[:, 0], v[:, 0], phys, pos % ps)
+
+    kg = _gather_pages(pool["kp"], page_table).astype(x.dtype)  # [B,L,K,hd]
+    vg = _gather_pages(pool["vp"], page_table).astype(x.dtype)
+    q = q.reshape(B, K, G, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bkgd,btkd->bkgt", q, kg) * scale
+    scores = scores.astype(jnp.float32)
+    t = jnp.arange(NP * ps)[None, :]
+    valid = jnp.repeat(page_table >= 0, ps, axis=1) & (t <= pos[:, None])
+    if window is not None:
+        valid = valid & (t > pos[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    prob = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", prob, vg).reshape(B, 1, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, pool
+
+
+def attention_extend_paged(cfg: ModelConfig, p: Dict, x: jax.Array,
+                           pool: Dict, pos0: jax.Array, window: Optional[int],
+                           page_table: jax.Array,
+                           valid: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, Dict]:
+    """Multi-token extension over the page pool: x: [B, Sx, d] continues at
+    position pos0 [B]; the engine has already mapped (and COW-resolved)
+    every logical page the valid lanes touch.  Lane l writes page
+    table[(pos0+l)//ps] offset (pos0+l)%ps; invalid lanes never reach the
+    pool.  There is no ring aliasing: distinct positions always land in
+    distinct (page, offset) slots, so — unlike the dense ring path — no
+    lane-deduplication or capacity clamp is needed."""
+    B, Sx, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    P, ps = pool["kp"].shape[0], pool["kp"].shape[1]
+    NP = page_table.shape[1]
+    positions = pos0[:, None] + jnp.arange(Sx)[None, :]          # [B,Sx]
+    q, k, v = _qkv(cfg, p, x, positions)
+    lpage = jnp.clip(positions // ps, 0, NP - 1)
+    phys = jnp.take_along_axis(page_table, lpage, axis=1)        # [B,Sx]
+    keep = phys >= 0
+    if valid is not None:
+        keep = keep & valid
+    phys = jnp.where(keep, phys, P)                              # drop pads
+    pool = _paged_write(pool, k, v, phys, positions % ps)
+
+    kg = _gather_pages(pool["kp"], page_table).astype(x.dtype)   # [B,L,K,hd]
+    vg = _gather_pages(pool["vp"], page_table).astype(x.dtype)
+    q = q.reshape(B, Sx, K, G, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, kg) * scale
+    scores = scores.astype(jnp.float32)
+    t = jnp.arange(NP * ps)[None, None, :]
+    attendable = (jnp.repeat(page_table >= 0, ps, axis=1)[:, None, :]
+                  & (t <= positions[:, :, None]))
+    if window is not None:
+        attendable = attendable & (t > positions[:, :, None] - window)
+    scores = jnp.where(attendable[:, None, None, :, :], scores, NEG_INF)
+    prob = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", prob, vg).reshape(B, Sx, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, pool
+
+
+# ---------------------------------------------------------------------------
 # Residual blocks (attn mixer + MLP)
 # ---------------------------------------------------------------------------
 
@@ -413,10 +550,16 @@ def attn_block_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
 
 
 def attn_block_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
-                      pos: jax.Array, kind: str = "attn") -> Tuple[jax.Array, Dict]:
+                      pos: jax.Array, kind: str = "attn",
+                      page_table: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Dict]:
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
-    y, cache = attention_decode(cfg, p["attn"], h, cache, pos,
-                                block_window(cfg, kind))
+    if "kp" in cache:                                   # paged pool layer
+        y, cache = attention_decode_paged(cfg, p["attn"], h, cache, pos,
+                                          page_table, block_window(cfg, kind))
+    else:
+        y, cache = attention_decode(cfg, p["attn"], h, cache, pos,
+                                    block_window(cfg, kind))
     x = x + y
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     return x + L.mlp(p["mlp"], h, cfg.mlp_act), cache
@@ -515,11 +658,17 @@ def attention_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
 
 def attn_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
                       pos0: jax.Array, kind: str = "attn",
-                      valid: Optional[jax.Array] = None
+                      valid: Optional[jax.Array] = None,
+                      page_table: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, Dict]:
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
-    y, cache = attention_extend(cfg, p["attn"], h, cache, pos0,
-                                block_window(cfg, kind), valid)
+    if "kp" in cache:                                   # paged pool layer
+        y, cache = attention_extend_paged(cfg, p["attn"], h, cache, pos0,
+                                          block_window(cfg, kind),
+                                          page_table, valid)
+    else:
+        y, cache = attention_extend(cfg, p["attn"], h, cache, pos0,
+                                    block_window(cfg, kind), valid)
     x = x + y
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     return x + L.mlp(p["mlp"], h, cfg.mlp_act), cache

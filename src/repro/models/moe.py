@@ -170,10 +170,16 @@ def moe_block_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
 
 
 def moe_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
-                     pos0: jax.Array, valid: Optional[jax.Array] = None):
+                     pos0: jax.Array, valid: Optional[jax.Array] = None,
+                     page_table=None):
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
-    y, cache = A.attention_extend(cfg, p["attn"], h, cache, pos0,
-                                  cfg.sliding_window, valid)
+    if "kp" in cache:                                   # paged pool layer
+        y, cache = A.attention_extend_paged(cfg, p["attn"], h, cache, pos0,
+                                            cfg.sliding_window, page_table,
+                                            valid)
+    else:
+        y, cache = A.attention_extend(cfg, p["attn"], h, cache, pos0,
+                                      cfg.sliding_window, valid)
     x = x + y
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     y, _ = moe_ffn(cfg, p["moe"], h, valid=valid)
@@ -181,10 +187,14 @@ def moe_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
 
 
 def moe_block_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
-                     pos: jax.Array):
+                     pos: jax.Array, page_table=None):
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
-    y, cache = A.attention_decode(cfg, p["attn"], h, cache, pos,
-                                  cfg.sliding_window)
+    if "kp" in cache:                                   # paged pool layer
+        y, cache = A.attention_decode_paged(cfg, p["attn"], h, cache, pos,
+                                            page_table, cfg.sliding_window)
+    else:
+        y, cache = A.attention_decode(cfg, p["attn"], h, cache, pos,
+                                      cfg.sliding_window)
     x = x + y
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     y, _ = moe_ffn(cfg, p["moe"], h)

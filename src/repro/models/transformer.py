@@ -74,6 +74,20 @@ def block_cache_def(cfg: ModelConfig, kind: str, batch: int, capacity: int,
     raise ValueError(kind)
 
 
+def block_cache_def_paged(cfg: ModelConfig, kind: str, batch: int,
+                          num_pages: int, page_size: int, dtype) -> Dict:
+    """Paged variant: attention-bearing layers get a shared page POOL (no
+    batch axis); recurrent layers keep their dense per-request O(1) state
+    — paging only pays off where cache size grows with sequence length."""
+    if kind in ("attn", "rg_attn", "moe"):
+        return A.paged_kv_cache_def(cfg, num_pages, page_size, dtype)
+    if kind == "mamba":
+        return M.mamba_cache_def(cfg, batch, dtype)
+    if kind == "rglru":
+        return RG.rglru_cache_def(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
 class TransformerLM:
     """Functional LM; params/caches are plain pytrees."""
 
@@ -123,6 +137,24 @@ class TransformerLM:
     def init_cache(self, batch: int, max_seq: int,
                    seq_shard: bool = True) -> PyTree:
         return L.init_empty_cache(self.cache_defs(batch, max_seq, seq_shard))
+
+    def cache_defs_paged(self, batch: int, num_pages: int,
+                         page_size: int) -> PyTree:
+        """Decode-cache defs with attention KV in a shared page pool
+        (scan-stacked pools are [layers, P, ps, K, hd]); recurrent layers
+        keep their dense [batch, ...] state."""
+        cfg = self.cfg
+        unit_caches = tuple(
+            block_cache_def_paged(cfg, k, batch, num_pages, page_size,
+                                  self.dtype)
+            for k in self.unit)
+        return {
+            "scan": (L.stack_defs(unit_caches, self.repeats)
+                     if self.repeats > 1 else unit_caches),
+            "tail": tuple(block_cache_def_paged(cfg, k, batch, num_pages,
+                                                page_size, self.dtype)
+                          for k in self.tail),
+        }
 
     # ---------------- activation sharding ---------------------------------
 
@@ -183,24 +215,29 @@ class TransformerLM:
             return RG.rglru_block_prefill(cfg, p, x)
         raise ValueError(kind)
 
-    def _apply_block_decode(self, kind: str, p, x, cache, pos):
+    def _apply_block_decode(self, kind: str, p, x, cache, pos,
+                            page_table=None):
         cfg = self.cfg
         if kind in ("attn", "rg_attn"):
-            return A.attn_block_decode(cfg, p, x, cache, pos, kind)
+            return A.attn_block_decode(cfg, p, x, cache, pos, kind,
+                                       page_table)
         if kind == "moe":
-            return MOE.moe_block_decode(cfg, p, x, cache, pos)
+            return MOE.moe_block_decode(cfg, p, x, cache, pos, page_table)
         if kind == "mamba":
             return M.mamba_block_decode(cfg, p, x, cache)
         if kind == "rglru":
             return RG.rglru_block_decode(cfg, p, x, cache)
         raise ValueError(kind)
 
-    def _apply_block_extend(self, kind: str, p, x, cache, pos0, valid=None):
+    def _apply_block_extend(self, kind: str, p, x, cache, pos0, valid=None,
+                            page_table=None):
         cfg = self.cfg
         if kind in ("attn", "rg_attn"):
-            return A.attn_block_extend(cfg, p, x, cache, pos0, kind, valid)
+            return A.attn_block_extend(cfg, p, x, cache, pos0, kind, valid,
+                                       page_table)
         if kind == "moe":
-            return MOE.moe_block_extend(cfg, p, x, cache, pos0, valid)
+            return MOE.moe_block_extend(cfg, p, x, cache, pos0, valid,
+                                        page_table)
         if kind == "mamba":
             return M.mamba_block_extend(cfg, p, x, cache, valid)
         if kind == "rglru":
@@ -298,7 +335,8 @@ class TransformerLM:
 
     def prefill_extend(self, params: PyTree, cache: PyTree, tokens: jax.Array,
                        pos0: jax.Array,
-                       n_valid: Optional[jax.Array] = None
+                       n_valid: Optional[jax.Array] = None,
+                       page_table: Optional[jax.Array] = None
                        ) -> Tuple[jax.Array, PyTree]:
         """Prefill a token SUFFIX on top of a cached prefix.
 
@@ -314,6 +352,10 @@ class TransformerLM:
         prompt split into arbitrary chunks reproduces monolithic prefill
         exactly — including for recurrent models, whose states must
         summarize precisely the processed prefix.
+
+        ``page_table`` ([B, NP] int32) selects the PAGED write/read path
+        for attention layers (cache leaves are shared page pools); the
+        same table serves every layer.
         """
         x = self.embed(params, tokens)
         valid = None
@@ -324,7 +366,8 @@ class TransformerLM:
             unit_params, unit_caches = payload
             new_caches = []
             for kind, p, c in zip(self.unit, unit_params, unit_caches):
-                x, c = self._apply_block_extend(kind, p, x, c, pos0, valid)
+                x, c = self._apply_block_extend(kind, p, x, c, pos0, valid,
+                                                page_table)
                 new_caches.append(c)
             return x, tuple(new_caches)
 
@@ -335,7 +378,8 @@ class TransformerLM:
             x, scan_caches = unit_body(x, (params["scan"], cache["scan"]))
         tail_caches = []
         for kind, p, c in zip(self.tail, params["tail"], cache["tail"]):
-            x, c = self._apply_block_extend(kind, p, x, c, pos0, valid)
+            x, c = self._apply_block_extend(kind, p, x, c, pos0, valid,
+                                            page_table)
             tail_caches.append(c)
         x = L.rmsnorm(params["ln_f"], x, self.cfg.norm_eps)
         if n_valid is None:
@@ -349,15 +393,19 @@ class TransformerLM:
     # ---------------- decode -----------------------------------------------
 
     def decode_step(self, params: PyTree, cache: PyTree, tokens: jax.Array,
-                    pos: jax.Array) -> Tuple[jax.Array, PyTree]:
-        """tokens: [B,1] int32; pos: [B] absolute position of this token."""
+                    pos: jax.Array,
+                    page_table: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, PyTree]:
+        """tokens: [B,1] int32; pos: [B] absolute position of this token.
+        ``page_table`` ([B, NP]) selects the paged attention path."""
         x = self.embed(params, tokens)
 
         def unit_body(x, payload):
             unit_params, unit_caches = payload
             new_caches = []
             for kind, p, c in zip(self.unit, unit_params, unit_caches):
-                x, c = self._apply_block_decode(kind, p, x, c, pos)
+                x, c = self._apply_block_decode(kind, p, x, c, pos,
+                                                page_table)
                 new_caches.append(c)
             return x, tuple(new_caches)
 
@@ -368,7 +416,7 @@ class TransformerLM:
             x, scan_caches = unit_body(x, (params["scan"], cache["scan"]))
         tail_caches = []
         for kind, p, c in zip(self.tail, params["tail"], cache["tail"]):
-            x, c = self._apply_block_decode(kind, p, x, c, pos)
+            x, c = self._apply_block_decode(kind, p, x, c, pos, page_table)
             tail_caches.append(c)
         x = L.rmsnorm(params["ln_f"], x, self.cfg.norm_eps)
         logits = self.unembed(params, x)

@@ -1,18 +1,32 @@
 """Token-prefix KV/state cache — the paper's prompt caching, TPU-native.
 
-Entries snapshot a request's full per-layer decode cache (KV pages for
-attention stages, conv/recurrent state for mamba/rglru stages) keyed by
-the exact token sequence.  Lookup returns the longest stored entry that
-prefix-matches a new prompt:
+Entries are keyed by the exact token sequence and hold one of two payload
+kinds:
+
+  * DENSE snapshots (ring-cache engines): a full copy of the per-layer
+    decode cache (KV ring buffers for attention stages, conv/recurrent
+    state for mamba/rglru stages).  Insert cost is a full-PyTree memcpy.
+  * PAGE-REFERENCE snapshots (paged engines): a
+    :class:`repro.serving.page_pool.PagedSnapshot` pinning the physical
+    pages that hold the prefix (O(1) insert, zero copy), plus the dense
+    recurrent state for hybrid models.  The cache never touches device
+    memory for these — refcounts are released through the entry's
+    ``on_evict`` callback when it is evicted or replaced.
+
+Lookup returns the longest stored entry that prefix-matches a new prompt:
 
   * full-entry hits are always reusable (states summarize exactly that
     prefix);
   * PARTIAL hits (stored sequence diverges after position p) are reusable
-    only for attention-pure models, by *truncating* the KV cache to a
-    page-aligned boundary <= p (tok indices beyond the cut are masked to
-    -1).  Recurrent state summarizes the entire stored prefix, so partial
-    reuse is structurally impossible for SSM/hybrid stages — the trie
-    enforces exact-boundary semantics for them (docs/SERVING.md).
+    only for attention-pure models, truncated to a page-aligned boundary
+    <= p (dense: tok indices beyond the cut masked to -1; paged: the
+    engine adopts only the first p // page_size pages).  Recurrent state
+    summarizes the entire stored prefix, so partial reuse is structurally
+    impossible for SSM/hybrid stages — the cache enforces exact-boundary
+    semantics for them (docs/SERVING.md).
+
+Whether a model has recurrent stages is derived from its ``ModelConfig``
+at construction (``model_cfg=``) rather than passed ad hoc by callers.
 
 Besides round-completion snapshots, the chunked-prefill scheduler inserts
 PARTIAL-PREFIX snapshots at page-aligned chunk boundaries
@@ -26,23 +40,38 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.serving.page_pool import PagedSnapshot
+
 PyTree = Any
+
+RECURRENT_KINDS = {"mamba", "rglru"}
+
+
+def config_is_recurrent(model_cfg) -> bool:
+    """Does this architecture carry mamba/RG-LRU state?  (Such state
+    summarizes its whole prefix, which forbids partial and exact-length
+    cache reuse — see PrefixCache.lookup.)"""
+    pattern = getattr(model_cfg, "block_pattern", ()) or ()
+    return bool(set(pattern) & RECURRENT_KINDS)
 
 
 @dataclass
 class Entry:
     tokens: Tuple[int, ...]
-    cache: PyTree                  # B=1 decode cache snapshot
+    cache: Any                     # B=1 dense snapshot OR PagedSnapshot
+    on_evict: Optional[Callable[[], None]] = None
     last_used: float = field(default_factory=time.monotonic)
     hits: int = 0
 
     @property
     def nbytes(self) -> int:
+        if isinstance(self.cache, PagedSnapshot):
+            return self.cache.nbytes
         return sum(x.size * x.dtype.itemsize
                    for x in jax.tree_util.tree_leaves(self.cache))
 
@@ -69,7 +98,7 @@ def truncate_attention_cache(cache: PyTree, keep_len: int) -> PyTree:
 @dataclass
 class LookupResult:
     cached_len: int
-    cache: Optional[PyTree]
+    cache: Optional[Any]           # dense PyTree copy OR raw PagedSnapshot
     kind: str                      # "miss" | "full" | "partial"
 
 
@@ -77,10 +106,13 @@ class PrefixCache:
     """LRU prefix cache over conversation caches."""
 
     def __init__(self, page_size: int = 256, max_entries: int = 64,
-                 recurrent: bool = False):
+                 recurrent: Optional[bool] = None, model_cfg=None):
         self.page_size = page_size
         self.max_entries = max_entries
-        self.recurrent = recurrent       # model has mamba/rglru stages
+        # model has mamba/rglru stages: derived from the architecture's
+        # block pattern unless a test overrides it explicitly
+        self.recurrent = (config_is_recurrent(model_cfg)
+                          if recurrent is None else recurrent)
         self.entries: Dict[Tuple[int, ...], Entry] = {}
         self.version = 0        # bumped on insert; lets pollers skip scans
         self.stats = {"hits": 0, "partial_hits": 0, "misses": 0,
@@ -106,7 +138,7 @@ class PrefixCache:
                 # generation needs the last prompt token processed live,
                 # but the stored state already summarizes it; replaying it
                 # would double-count it in the recurrence.  (Attention
-                # caches are fine: the ring rewrite is idempotent.)
+                # caches are fine: the KV rewrite is idempotent.)
                 if self.recurrent and p == len(key):
                     continue
                 if best is None or p > best[0]:
@@ -127,6 +159,10 @@ class PrefixCache:
         self.stats["hits" if kind == "full" else "partial_hits"] += 1
         self.stats["tokens_saved"] += plen - min_len
         cache = entry.cache
+        if isinstance(cache, PagedSnapshot):
+            # page references: the engine adopts pages (incref) itself and
+            # truncates partial hits by adopting plen // page_size pages
+            return LookupResult(plen, cache, kind)
         if kind == "partial":
             cache = truncate_attention_cache(cache, plen)
         # deep-copy leaves so the caller can mutate its cache freely
@@ -134,18 +170,37 @@ class PrefixCache:
                                        else x, cache)
         return LookupResult(plen, cache, kind)
 
-    def insert(self, tokens: List[int], cache: PyTree) -> None:
+    def insert(self, tokens: List[int], cache: Any,
+               on_evict: Optional[Callable[[], None]] = None) -> None:
         key = tuple(tokens)
         self.version += 1
         if key in self.entries:
-            self.entries[key].cache = cache
-            self.entries[key].last_used = time.monotonic()
+            old = self.entries[key]
+            if old.on_evict is not None:
+                old.on_evict()            # release replaced payload's pins
+            old.cache = cache
+            old.on_evict = on_evict
+            old.last_used = time.monotonic()
             return
         if len(self.entries) >= self.max_entries:
             victim = min(self.entries.values(), key=lambda e: e.last_used)
-            del self.entries[victim.tokens]
-            self.stats["evictions"] += 1
-        self.entries[key] = Entry(key, cache)
+            self._evict(victim)
+        self.entries[key] = Entry(key, cache, on_evict)
+
+    def _evict(self, entry: Entry) -> None:
+        del self.entries[entry.tokens]
+        if entry.on_evict is not None:
+            entry.on_evict()
+        self.stats["evictions"] += 1
+
+    def evict_lru(self) -> bool:
+        """Evict the least-recently-used entry (page-pool pressure relief
+        for paged engines).  Returns False when the cache is empty."""
+        if not self.entries:
+            return False
+        victim = min(self.entries.values(), key=lambda e: e.last_used)
+        self._evict(victim)
+        return True
 
     def wants_boundary(self, tokens: List[int]) -> bool:
         """Should the engine snapshot this partial prefix?  Page-aligned
@@ -154,13 +209,32 @@ class PrefixCache:
         return (len(tokens) > 0 and len(tokens) % self.page_size == 0
                 and tuple(tokens) not in self.entries)
 
-    def insert_boundary(self, tokens: List[int], cache: PyTree) -> None:
+    def insert_boundary(self, tokens: List[int], cache: Any,
+                        on_evict: Optional[Callable[[], None]] = None
+                        ) -> None:
         """Insert a mid-prefill partial-prefix snapshot (chunk boundary)."""
         if tuple(tokens) in self.entries:
+            if on_evict is not None:
+                on_evict()                # duplicate publication: unpin
             return                        # boundary already stored; keep LRU age
         self.stats["boundary_snapshots"] += 1
-        self.insert(list(tokens), cache)
+        self.insert(list(tokens), cache, on_evict)
 
     @property
     def nbytes(self) -> int:
-        return sum(e.nbytes for e in self.entries.values())
+        """Resident bytes pinned by the cache.  Paged entries share
+        physical pages (boundary snapshots of one prompt pin nested page
+        lists), so each physical page is counted ONCE across entries —
+        summing per-entry sizes would overstate quadratically."""
+        total = 0
+        seen: set = set()
+        for e in self.entries.values():
+            c = e.cache
+            if isinstance(c, PagedSnapshot):
+                fresh = [p for p in c.pages if p >= 0 and p not in seen]
+                seen.update(fresh)
+                total += (len(fresh) * c.meta.get("page_nbytes", 0)
+                          + c.meta.get("rec_nbytes", 0))
+            else:
+                total += e.nbytes
+        return total

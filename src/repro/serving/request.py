@@ -64,6 +64,15 @@ class Request:
     cached_len: int = 0         # prefix-cache hit length at admission
     prefill_chunks: int = 0     # mixed-step chunks this request consumed
     admit_seq: int = 0          # admission order (budget fairness key)
+    # tokens to (re)prefill this admission: prompt, plus any output already
+    # generated before a page-pool preemption requeued the request — the
+    # replay restores the exact decode state so generation continues
+    prefill_target: Optional[List[int]] = None
+    preemptions: int = 0        # times evicted from the page pool & requeued
+    # highest prefill position already billed to usage (input/cache_read/
+    # output): a preemption replay RECOMPUTES those positions but must not
+    # re-bill them — TokenUsage stays what the user would be charged
+    billed_prefill: int = 0
 
     @property
     def total_len(self) -> int:
@@ -71,4 +80,6 @@ class Request:
 
     @property
     def prefill_remaining(self) -> int:
-        return len(self.prompt) - self.prefill_pos
+        target = self.prefill_target if self.prefill_target is not None \
+            else self.prompt
+        return len(target) - self.prefill_pos

@@ -170,12 +170,14 @@ def test_mixed_steps_respect_token_budget():
 
 
 def test_chunk_clamped_to_ring_capacity():
-    """Lane width must never exceed the smallest attention ring capacity:
-    with more lanes than ring slots a chunk would overwrite entries
-    before its own lanes attend to them.  recurrentgemma's smoke config
-    has local_window=32, so a 64-lane request must clamp to 32 — and
-    still produce the same tokens as an explicitly small chunk."""
+    """RING MODE ONLY: lane width must never exceed the smallest attention
+    ring capacity — with more lanes than ring slots a chunk would
+    overwrite entries before its own lanes attend to them.
+    recurrentgemma's smoke config has local_window=32, so a 64-lane
+    request must clamp to 32 — and still produce the same tokens as an
+    explicitly small chunk."""
     eng, _, _ = make_engine("recurrentgemma_9b", prefix_cache=False,
+                            paged_kv=False,
                             max_batch=1, max_seq=128, prefill_chunk=64,
                             prefill_token_budget=64)
     assert eng.chunk == 32
@@ -184,6 +186,29 @@ def test_chunk_clamped_to_ring_capacity():
     eng.submit(r)
     eng.run()
     eng2, _, _ = make_engine("recurrentgemma_9b", prefix_cache=False,
+                             paged_kv=False,
+                             max_batch=1, max_seq=128, prefill_chunk=8,
+                             prefill_token_budget=8)
+    r2 = Request(prompt=list(prompt), max_new_tokens=4, eos_id=None)
+    eng2.submit(r2)
+    eng2.run()
+    assert r.output == r2.output
+
+
+def test_paged_lanes_not_clamped_to_window():
+    """Paged mode has no ring aliasing — every position is a distinct
+    (page, offset) slot — so wide chunks are legal even below the local
+    window, and tokens still match the clamped ring engine's."""
+    eng, _, _ = make_engine("recurrentgemma_9b", prefix_cache=False,
+                            max_batch=1, max_seq=128, page_size=8,
+                            prefill_chunk=64, prefill_token_budget=64)
+    assert eng.paged and eng.chunk == 64
+    prompt = [1] + list(range(10, 60))                     # 51 tokens > window
+    r = Request(prompt=list(prompt), max_new_tokens=4, eos_id=None)
+    eng.submit(r)
+    eng.run()
+    eng2, _, _ = make_engine("recurrentgemma_9b", prefix_cache=False,
+                             paged_kv=False,
                              max_batch=1, max_seq=128, prefill_chunk=8,
                              prefill_token_budget=8)
     r2 = Request(prompt=list(prompt), max_new_tokens=4, eos_id=None)
