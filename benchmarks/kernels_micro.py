@@ -1,5 +1,10 @@
 """Kernel microbenchmarks (interpret mode on CPU = correctness-scale
-timings; real performance comes from the TPU Mosaic pipeline)."""
+timings; real performance comes from the TPU Mosaic pipeline).
+
+Paged-attention rows time BOTH the Pallas kernel and its XLA oracle
+(jitted), fp and int8-quantized: a kernel regression shows up here as a
+kernel/oracle ratio shift in the bench trajectory, without waiting for
+an end-to-end number to move."""
 from __future__ import annotations
 
 import time
@@ -7,7 +12,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.kernels import kv_quant as Q
+from repro.kernels import ops, ref
 
 
 def _time(fn, *args, iters=3, **kw):
@@ -46,6 +52,29 @@ def run(verbose: bool = True):
     us = _time(ops.paged_decode_attention, qd, kp, vp, pt, pos,
                interpret=True)
     rows.append(("kernel_paged_decode_attention_256", us, "B2P64ps16"))
+    us = _time(jax.jit(ref.paged_decode_attention_ref), qd, kp, vp, pt, pos)
+    rows.append(("oracle_paged_decode_attention_256", us, "B2P64ps16"))
+
+    # int8-quantized pools + scale sidecars: fused-dequant kernel vs the
+    # XLA-gather oracle (the engine's read path is the factored XLA
+    # equivalent; the kernel is the TPU path)
+    kq, ksc, kz = Q.quantize_k(kp)
+    vq, vsc = Q.quantize_v(vp)
+    us = _time(ops.paged_decode_attention, qd, kq, vq, pt, pos,
+               k_scale=ksc, k_zero=kz, v_scale=vsc, interpret=True)
+    rows.append(("kernel_quant_paged_decode_attention_256", us,
+                 "B2P64ps16int8"))
+    us = _time(jax.jit(ref.paged_decode_attention_ref),
+               qd, kq, vq, pt, pos, k_scale=ksc, k_zero=kz, v_scale=vsc)
+    rows.append(("oracle_quant_paged_decode_attention_256", us,
+                 "B2P64ps16int8"))
+
+    # quantized dense-ring decode kernel
+    kqd, ksd, kzd = Q.quantize_k(kd)
+    vqd, vsd = Q.quantize_v(vd)
+    us = _time(ops.decode_attention, qd, kqd, vqd, tok, pos, k_scale=ksd,
+               k_zero=kzd, v_scale=vsd, interpret=True)
+    rows.append(("kernel_quant_decode_attention_256", us, "B2C256int8"))
 
     B, S, D, N = 1, 64, 128, 8
     dt = jax.nn.softplus(jax.random.normal(ks[6], (B, S, D))) * 0.1

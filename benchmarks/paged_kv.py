@@ -1,7 +1,7 @@
 """Paged KV-cache benchmark: best-of-N shared-prompt memory + decode
 throughput, A/B against the dense ring-cache baseline (docs/SERVING.md).
 
-Two scenarios on the CPU smoke model:
+Three scenarios on the CPU smoke model:
 
 1. BEST-OF-8 MEMORY FOOTPRINT — 8 requests over one shared prompt.  The
    ring engine materializes 8 dense [max_seq] caches and copies the full
@@ -14,9 +14,18 @@ Two scenarios on the CPU smoke model:
 2. DECODE THROUGHPUT — identical mixed decode workload through both
    engines; the paged gather path must not cost decode throughput.
 
+3. QUANTIZED KV (``kv_dtype="int8"``) — fp-paged vs int8-paged A/B at an
+   identical greedy workload on a quickly-fitted smoke model
+   (train/quick_fit.py — random-init logits are too flat for greedy
+   parity to mean anything): asserts token-for-token output match,
+   reports the resident-KV-bytes delta (int8 pages + f32 scale sidecars
+   vs fp pages; same page count by construction) and the decode
+   throughput ratio.
+
 Usage: PYTHONPATH=src python benchmarks/paged_kv.py [--smoke]
-``--smoke`` shrinks the workload to a <30s CI gate (make verify) that
-still exercises pool alloc/COW/pinning and both engine modes.
+``--smoke`` shrinks the workload to a ~30s CI gate (make verify; ~26s
+on an idle 2-core box, jit compiles dominate) that still exercises pool
+alloc/COW/pinning, both engine modes, and the quantized A/B.
 """
 from __future__ import annotations
 
@@ -30,6 +39,7 @@ from repro.configs.base import ServeConfig
 from repro.models.registry import build_model, get_smoke_config
 from repro.serving.engine import Engine
 from repro.serving.request import Request, Status
+from repro.train.quick_fit import quick_fit_ramp, ramp_prompt
 
 
 def _model():
@@ -136,6 +146,78 @@ def _throughput(m, params, *, paged: bool, n_req: int, prompt_len: int,
     return (eng.model_steps["decode_steps"] - before) / dt
 
 
+def _quant_ab(m, params, *, n_req: int, prompt_len: int, new_tokens: int,
+              page_size: int, decode_ctx: int, decode_steps: int,
+              verbose: bool):
+    """fp-paged vs int8-paged A/B on ONE engine pair (compile time is
+    most of this benchmark's budget on a 2-core CI box).
+
+    Phase 1 — greedy token match + resident-KV-bytes delta at an
+    identical short ramp workload (pool peak read before phase 2).
+    Phase 2 — steady-state decode throughput: rows prefilled to
+    ``decode_ctx`` context, then pure decode ticks timed one at a time
+    with the two engines ALTERNATING; each side's rate comes from its
+    MINIMUM step time (the scheduler on a small shared host adds
+    multi-ms noise spikes, and the per-step minimum is the standard
+    estimator of the true compute floor).  Prefill cost is excluded, so
+    this isolates the memory-bound decode step the int8 pages shrink."""
+    max_seq = decode_ctx + 2 * decode_steps + 32
+    prompts = [ramp_prompt(10 + 7 * i, prompt_len) for i in range(n_req)]
+    engines, outs, kv_bytes = {}, {}, {}
+    for kvd in ("model", "int8"):
+        eng = Engine(m, params, ServeConfig(max_batch=n_req, max_seq=max_seq,
+                                            page_size=page_size,
+                                            kv_dtype=kvd,
+                                            prefix_cache=False))
+        reqs = [Request(prompt=list(p), max_new_tokens=new_tokens,
+                        eos_id=None) for p in prompts]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.status is Status.DONE for r in reqs)
+        outs[kvd] = [r.output for r in reqs]
+        kv_bytes[kvd] = _kv_bytes(eng)      # peak from THIS workload
+        eng.pool.check()
+        engines[kvd] = eng
+    match = outs["int8"] == outs["model"]
+    ratio = kv_bytes["int8"] / max(kv_bytes["model"], 1)
+
+    rate_rows = {}
+    for kvd, eng in engines.items():
+        reqs = [Request(prompt=[1] + [(10 + i + t) % 500
+                                      for t in range(decode_ctx - 1)],
+                        max_new_tokens=2 * decode_steps + 16,
+                        eos_id=None) for i in range(n_req)]
+        for r in reqs:
+            eng.submit(r)
+        while not all(r.status is Status.DECODING for r in reqs):
+            eng.step()
+        for _ in range(4):                  # warm the decode fast path
+            eng.step()
+        rate_rows[kvd] = reqs
+    t_min = {"model": float("inf"), "int8": float("inf")}
+    for _ in range(decode_steps):
+        for kvd, eng in engines.items():
+            t0 = time.perf_counter()
+            eng.step()
+            t_min[kvd] = min(t_min[kvd], time.perf_counter() - t0)
+    for kvd, reqs in rate_rows.items():
+        assert all(r.status is Status.DECODING for r in reqs), \
+            "decode-rate rows finished mid-measurement"
+    tok_fp, tok_q = n_req / t_min["model"], n_req / t_min["int8"]
+    if verbose:
+        print(f"quantized KV (int8), {n_req} x {prompt_len}-token prompts "
+              f"+ {new_tokens} greedy tokens:")
+        print(f"  greedy outputs match fp token-for-token: {match}")
+        print(f"  resident KV bytes: fp {kv_bytes['model']/1e6:.3f}MB -> "
+              f"int8 {kv_bytes['int8']/1e6:.3f}MB "
+              f"({ratio:.2f}x, {1/max(ratio,1e-9):.1f}x smaller)")
+        print(f"  decode throughput @ {decode_ctx}-token context: "
+              f"fp {tok_fp:.1f} tok/s, int8 {tok_q:.1f} tok/s "
+              f"({tok_q/max(tok_fp,1e-9):.2f}x)")
+    return match, ratio, tok_q / max(tok_fp, 1e-9)
+
+
 def run(verbose: bool = True, smoke: bool = False):
     m, params = _model()
     rows = []
@@ -165,6 +247,19 @@ def run(verbose: bool = True, smoke: bool = False):
     rows.append(("paged_kv_decode_tok_s", 0.0, f"{tok_paged:.1f}"))
     rows.append(("paged_kv_decode_vs_ring", 0.0,
                  f"{tok_paged/max(tok_ring,1e-9):.2f}x"))
+
+    # ---- quantized KV A/B (int8 pages + scale sidecars vs fp) ----------
+    fitted = quick_fit_ramp(m, params, steps=120)
+    qkw = (dict(n_req=4, prompt_len=32, new_tokens=8, page_size=16,
+                decode_ctx=224, decode_steps=12) if smoke
+           else dict(n_req=4, prompt_len=32, new_tokens=16, page_size=16,
+                     decode_ctx=352, decode_steps=32))
+    match, ratio, speed = _quant_ab(m, fitted, verbose=verbose, **qkw)
+    assert match, "int8 KV flipped greedy tokens vs fp"
+    assert ratio <= 0.35, f"int8 resident KV ratio {ratio:.2f} > 0.35"
+    rows.append(("quant_kv_greedy_match", 0.0, str(match)))
+    rows.append(("quant_kv_bytes_ratio", 0.0, f"{ratio:.2f}x"))
+    rows.append(("quant_kv_decode_vs_fp", 0.0, f"{speed:.2f}x"))
     return rows
 
 

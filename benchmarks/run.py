@@ -1,10 +1,22 @@
 """Benchmark harness: one module per paper table/figure + systems benches.
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call is 0 for
-analytic reproductions; derived carries the figure's key quantity).
+analytic reproductions; derived carries the figure's key quantity) and
+writes the same rows to ``benchmarks/BENCH_results.csv`` plus a
+machine-readable ``benchmarks/BENCH_results.json`` (name, us_per_call,
+derived, timestamp).  Those two files are COMMITTED on purpose: each
+PR's ``make bench`` run is a trajectory point, so perf history lives in
+git next to the code that produced it.  Only this harness writes them —
+``make verify`` runs the smoke modules standalone and never dirties the
+tree; refresh the files (one full ``make bench``) when a PR moves a
+number it cares about.
+
+Exits non-zero when any benchmark module fails.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 import traceback
@@ -27,6 +39,33 @@ MODULES = [
     "benchmarks.kernels_micro",
 ]
 
+OUT_DIR = os.path.dirname(os.path.abspath(__file__))
+# ``python benchmarks/run.py`` puts benchmarks/ (not the repo root) on
+# sys.path; the module imports below need the root.
+_ROOT = os.path.dirname(OUT_DIR)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+
+def write_results(all_rows, failures) -> None:
+    """Persist the run next to this file: CSV (human diffable) + JSON
+    (machine-readable trajectory point)."""
+    ts = time.strftime("%Y-%m-%dT%H:%M:%S")
+    with open(os.path.join(OUT_DIR, "BENCH_results.csv"), "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for n, us, d in all_rows:
+            f.write(f"{n},{us:.1f},{d}\n")
+    payload = {
+        "timestamp": ts,
+        "failures": list(failures),
+        "results": [{"name": n, "us_per_call": round(us, 1),
+                     "derived": str(d), "timestamp": ts}
+                    for n, us, d in all_rows],
+    }
+    with open(os.path.join(OUT_DIR, "BENCH_results.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+
 
 def main() -> None:
     import importlib
@@ -48,6 +87,9 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for n, us, d in all_rows:
         print(f"{n},{us:.1f},{d}")
+    write_results(all_rows, failures)
+    print(f"\nwrote {os.path.join(OUT_DIR, 'BENCH_results.json')} "
+          f"({len(all_rows)} rows)")
     if failures:
         print(f"\nFAILED benchmarks: {failures}", file=sys.stderr)
         raise SystemExit(1)

@@ -12,7 +12,11 @@ python -m pytest -x -q
 echo "== smoke: benchmarks/engine_micro.py =="
 python benchmarks/engine_micro.py
 
-echo "== smoke: benchmarks/paged_kv.py --smoke =="
+# Paged + quantized-KV smoke: exercises pool alloc/COW/pinning, both
+# engine modes, AND the kv_dtype="int8" A/B (greedy token match vs fp,
+# resident-KV-bytes delta printed below, decode-throughput ratio) —
+# all under the ~30s gate (jit compiles dominate; load-dependent).
+echo "== smoke: benchmarks/paged_kv.py --smoke (paged + int8 KV) =="
 python benchmarks/paged_kv.py --smoke
 
 echo "verify: OK"

@@ -63,6 +63,12 @@ class ModelConfig:
     norm_eps: float = 1e-6
     dtype: str = "bfloat16"                # activation dtype
     param_dtype: str = "float32"           # storage dtype (bf16 for mega archs)
+    # KV-cache storage dtype: "model" stores K/V in the activation dtype
+    # (bit-identical baseline); "int8" quantizes at write time with
+    # per-slot-per-head scales (asymmetric K, symmetric V — see
+    # kernels/kv_quant.py) and dequantizes at read, ~3.5-4x smaller
+    # resident KV.  ServeConfig.kv_dtype overrides this per engine.
+    kv_dtype: str = "model"
     tie_embeddings: bool = False
 
     # Megatron-style sequence parallelism: residual stream sharded along
@@ -173,6 +179,13 @@ class ServeConfig:
     # page_size) — enough that no request mix can deadlock; set lower to
     # trade memory for preemptions, higher to keep more snapshots pinned.
     num_pages: int = 0
+    # KV-cache storage dtype for this engine: None inherits
+    # ModelConfig.kv_dtype; "model" pins the fp baseline (bit-identical
+    # to unquantized serving); "int8" quantizes K/V pages at write time
+    # (per-slot-per-head scales travel with their pages through COW
+    # copies and snapshot pins).  Accuracy caveat + A/B recipe:
+    # docs/SERVING.md#quantized-kv-cache-int8.
+    kv_dtype: Optional[str] = None
     max_think_tokens_low: int = 1024       # paper's "low" thinking budget
     max_think_tokens_high: int = 4096      # paper's "high" thinking budget
     temperature: float = 0.0

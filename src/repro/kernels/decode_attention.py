@@ -11,6 +11,14 @@ stream through VMEM while m/l/acc accumulators persist in scratch across
 the nc iterations; the final iteration writes out.  This is the
 distributed-friendly layout matching the seq-sharded cache of the
 serving dry-run.
+
+QUANTIZED mode (``k_scale``/``k_zero``/``v_scale`` [B, C, K] given; k/v
+int8): tiles are dequantized IN-REGISTER — the [bk] scale vectors ride
+in the same block walk as their int8 rows, and the fp32 multiply-add
+happens on the VMEM tile right before the QK^T / PV matmuls, so HBM
+traffic is the int8 bytes plus an hd-th of scales (kernels/kv_quant.py
+defines the number format; softmax accumulators stay fp32 as in the fp
+kernel).
 """
 from __future__ import annotations
 
@@ -25,9 +33,18 @@ import jax.experimental.pallas.tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(q_ref, k_ref, v_ref, tok_ref, pos_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, bk: int, nc: int,
+def _decode_kernel(q_ref, k_ref, v_ref, *rest, bk: int, nc: int,
                    scale: float, window: Optional[int]):
+    """One body for fp and int8 modes.  Quantized calls pass three extra
+    scale refs ([1, bk, 1] blocks of the [B, C, K] sidecars) and the k/v
+    tiles are dequantized in-register (asymmetric K: (q+128)*scale+zero;
+    symmetric V: q*scale) before the shared online-softmax update."""
+    if len(rest) == 9:                                        # quantized
+        ks_ref, kz_ref, vs_ref, tok_ref, pos_ref, o_ref, \
+            m_ref, l_ref, acc_ref = rest
+    else:
+        ks_ref = kz_ref = vs_ref = None
+        tok_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
     c = pl.program_id(2)
 
     @pl.when(c == 0)
@@ -39,6 +56,10 @@ def _decode_kernel(q_ref, k_ref, v_ref, tok_ref, pos_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32) * scale               # [G, hd]
     k = k_ref[0, :, 0].astype(jnp.float32)                    # [bk, hd]
     v = v_ref[0, :, 0].astype(jnp.float32)
+    if ks_ref is not None:
+        k = ((k + 128.0) * ks_ref[0, :, 0][:, None]
+             + kz_ref[0, :, 0][:, None])
+        v = v * vs_ref[0, :, 0][:, None]
     tok = tok_ref[0]                                          # [bk]
     pos = pos_ref[0, 0]
 
@@ -65,18 +86,31 @@ def _decode_kernel(q_ref, k_ref, v_ref, tok_ref, pos_ref, o_ref,
 
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      tok: jax.Array, pos: jax.Array,
-                     *, window: Optional[int] = None, bk: int = 128,
+                     *, k_scale: Optional[jax.Array] = None,
+                     k_zero: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None,
+                     window: Optional[int] = None, bk: int = 128,
                      interpret: bool = True) -> jax.Array:
-    """q: [B,K,G,hd]; k/v: [B,C,K,hd]; tok: [B,C]; pos: [B]."""
+    """q: [B,K,G,hd]; k/v: [B,C,K,hd]; tok: [B,C]; pos: [B].
+    With k_scale/k_zero/v_scale ([B,C,K] f32), k/v are int8 and
+    dequantized inside the kernel."""
     B, K, G, hd = q.shape
     C = k.shape[1]
     bk = min(bk, C)
     assert C % bk == 0, (C, bk)
     nc = C // bk
     scale = hd ** -0.5
+    quant = k_scale is not None
+    assert quant == (k_zero is not None) == (v_scale is not None)
+    pos2 = pos[:, None]                                       # [B,1] for SMEM
+    sc_spec = pl.BlockSpec((1, bk, 1), lambda b, h, c: (b, c, h))
     kernel = functools.partial(_decode_kernel, bk=bk, nc=nc, scale=scale,
                                window=window)
-    pos2 = pos[:, None]                                       # [B,1] for SMEM
+    if quant:
+        extra_in, extra_specs = ([k_scale, k_zero, v_scale],
+                                 [sc_spec, sc_spec, sc_spec])
+    else:
+        extra_in, extra_specs = [], []
     return pl.pallas_call(
         kernel,
         grid=(B, K, nc),
@@ -84,6 +118,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pl.BlockSpec((1, 1, G, hd), lambda b, h, c: (b, h, 0, 0)),
             pl.BlockSpec((1, bk, 1, hd), lambda b, h, c: (b, c, h, 0)),
             pl.BlockSpec((1, bk, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            *extra_specs,
             pl.BlockSpec((1, bk), lambda b, h, c: (b, c)),
             pl.BlockSpec((1, 1), lambda b, h, c: (b, 0)),
         ],
@@ -95,4 +130,4 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((G, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, tok, pos2)
+    )(q, k, v, *extra_in, tok, pos2)

@@ -29,18 +29,26 @@ def flash_attention(q, k, v, *, window: Optional[int] = None, bq: int = 128,
 
 
 @functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
-def decode_attention(q, k, v, tok, pos, *, window: Optional[int] = None,
+def decode_attention(q, k, v, tok, pos, *, k_scale=None, k_zero=None,
+                     v_scale=None, window: Optional[int] = None,
                      bk: int = 128, interpret: Optional[bool] = None):
+    """k_scale/k_zero/v_scale ([B,C,K] f32) select the fused-dequant int8
+    kernel (k/v int8)."""
     interp = (not _on_tpu()) if interpret is None else interpret
-    return _decode(q, k, v, tok, pos, window=window, bk=bk, interpret=interp)
+    return _decode(q, k, v, tok, pos, k_scale=k_scale, k_zero=k_zero,
+                   v_scale=v_scale, window=window, bk=bk, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_decode_attention(q, k_pool, v_pool, page_table, pos, *,
+                           k_scale=None, k_zero=None, v_scale=None,
                            window: Optional[int] = None,
                            interpret: Optional[bool] = None):
+    """k_scale/k_zero/v_scale ([P,ps,K] f32 sidecar pools) select the
+    fused-dequant int8 kernel (pools int8)."""
     interp = (not _on_tpu()) if interpret is None else interpret
-    return _paged(q, k_pool, v_pool, page_table, pos, window=window,
+    return _paged(q, k_pool, v_pool, page_table, pos, k_scale=k_scale,
+                  k_zero=k_zero, v_scale=v_scale, window=window,
                   interpret=interp)
 
 

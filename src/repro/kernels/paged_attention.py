@@ -22,6 +22,15 @@ the NP iterations; the final iteration writes out.  Unmapped pages
 (table entry -1) are clamped to page 0 for the DMA and masked out of the
 softmax, so rows shorter than NP pages cost only wasted bandwidth, never
 wrong results.
+
+QUANTIZED mode (``k_scale``/``k_zero``/``v_scale`` pools [P, ps, K]
+given; pools int8): the scale sidecar pages ride the SAME
+scalar-prefetch page-table walk as the int8 payload — one extra [ps]
+vector per (page, head) DMA — and tiles are dequantized in-register
+right before the QK^T / PV matmuls (asymmetric K, symmetric V;
+kernels/kv_quant.py).  Per decoded token this reads ~hd/(hd+12) fewer
+HBM bytes than the fp kernel at the same grid, which is the whole win:
+paged decode is memory-bound.  fp32 softmax accumulators unchanged.
 """
 from __future__ import annotations
 
@@ -36,9 +45,18 @@ import jax.experimental.pallas.tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(pt_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, ps: int, np_: int,
+def _paged_kernel(pt_ref, q_ref, k_ref, v_ref, *rest, ps: int, np_: int,
                   scale: float, window: Optional[int]):
+    """One body for fp and int8 modes.  Quantized calls pass three extra
+    scale refs ([1, ps, 1] pages of the [P, ps, K] sidecars, DMA'd by
+    the same page-table walk) and the k/v tiles are dequantized
+    in-register (asymmetric K, symmetric V — kernels/kv_quant.py)
+    before the shared online-softmax update."""
+    if len(rest) == 8:                                        # quantized
+        ks_ref, kz_ref, vs_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        ks_ref = kz_ref = vs_ref = None
+        pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     j = pl.program_id(2)                                      # logical page
 
@@ -51,6 +69,10 @@ def _paged_kernel(pt_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32) * scale               # [G, hd]
     k = k_ref[0, :, 0].astype(jnp.float32)                    # [ps, hd]
     v = v_ref[0, :, 0].astype(jnp.float32)
+    if ks_ref is not None:
+        k = ((k + 128.0) * ks_ref[0, :, 0][:, None]
+             + kz_ref[0, :, 0][:, None])
+        v = v * vs_ref[0, :, 0][:, None]
     pos = pos_ref[0, 0]
     mapped = pt_ref[b, j] >= 0
 
@@ -79,20 +101,37 @@ def _paged_kernel(pt_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
 
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            page_table: jax.Array, pos: jax.Array,
-                           *, window: Optional[int] = None,
+                           *, k_scale: Optional[jax.Array] = None,
+                           k_zero: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
+                           window: Optional[int] = None,
                            interpret: bool = True) -> jax.Array:
-    """q: [B,K,G,hd]; k/v_pool: [P,ps,K,hd]; page_table: [B,NP]; pos: [B]."""
+    """q: [B,K,G,hd]; k/v_pool: [P,ps,K,hd]; page_table: [B,NP]; pos: [B].
+    With k_scale/k_zero/v_scale ([P,ps,K] f32 sidecar pools), the k/v
+    pools are int8 and dequantized inside the kernel."""
     B, K, G, hd = q.shape
     ps = k_pool.shape[1]
     NP = page_table.shape[1]
     scale = hd ** -0.5
-    kernel = functools.partial(_paged_kernel, ps=ps, np_=NP, scale=scale,
-                               window=window)
+    quant = k_scale is not None
+    assert quant == (k_zero is not None) == (v_scale is not None)
     pos2 = pos[:, None].astype(jnp.int32)                     # [B,1]
 
     def kv_map(b, h, j, pt):
         # unmapped logical pages DMA physical page 0; the body masks them
         return (jnp.maximum(pt[b, j], 0), 0, h, 0)
+
+    def sc_map(b, h, j, pt):
+        return (jnp.maximum(pt[b, j], 0), 0, h)
+
+    sc_spec = pl.BlockSpec((1, ps, 1), sc_map)
+    kernel = functools.partial(_paged_kernel, ps=ps, np_=NP, scale=scale,
+                               window=window)
+    if quant:
+        extra_in, extra_specs = ([k_scale, k_zero, v_scale],
+                                 [sc_spec, sc_spec, sc_spec])
+    else:
+        extra_in, extra_specs = [], []
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -101,6 +140,7 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
             pl.BlockSpec((1, 1, G, hd), lambda b, h, j, pt: (b, h, 0, 0)),
             pl.BlockSpec((1, ps, 1, hd), kv_map),
             pl.BlockSpec((1, ps, 1, hd), kv_map),
+            *extra_specs,
             pl.BlockSpec((1, 1), lambda b, h, j, pt: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j, pt: (b, h, 0, 0)),
@@ -115,4 +155,4 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), q, k_pool, v_pool, pos2)
+    )(page_table.astype(jnp.int32), q, k_pool, v_pool, *extra_in, pos2)

@@ -6,7 +6,19 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import kv_quant
+
 NEG_INF = -1e30
+
+
+def _maybe_dequant(k, v, k_scale, k_zero, v_scale):
+    """Dequantize int8 K/V (+ per-slot-per-head scales) to float32; pass
+    fp caches through.  Shared by the decode/paged-decode oracles so the
+    quantized kernels are checked against exactly kv_quant's math."""
+    if k_scale is None:
+        return k.astype(jnp.float32), v.astype(jnp.float32)
+    return (kv_quant.dequantize_k(k, k_scale, k_zero),
+            kv_quant.dequantize_v(v, v_scale))
 
 
 def flash_attention_ref(q, k, v, *, window: Optional[int] = None):
@@ -29,35 +41,47 @@ def flash_attention_ref(q, k, v, *, window: Optional[int] = None):
     return o.reshape(B, H, S, hd).astype(q.dtype)
 
 
-def decode_attention_ref(q, k, v, tok, pos, *, window: Optional[int] = None):
-    """q: [B,K,G,hd]; k/v: [B,C,K,hd]; tok: [B,C]; pos: [B]."""
+def decode_attention_ref(q, k, v, tok, pos, *, k_scale=None, k_zero=None,
+                         v_scale=None, window: Optional[int] = None):
+    """q: [B,K,G,hd]; k/v: [B,C,K,hd]; tok: [B,C]; pos: [B].  Optional
+    scales ([B,C,K]) mark an int8 cache (dequantized here)."""
     B, K, G, hd = q.shape
+    kf, vf = _maybe_dequant(k, v, k_scale, k_zero, v_scale)
     qf = q.astype(jnp.float32)
-    s = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, kf) * hd ** -0.5
     valid = (tok >= 0) & (tok <= pos[:, None])
     if window is not None:
         valid = valid & (tok > pos[:, None] - window)
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    o = jnp.einsum("bkgt,btkd->bkgd", p, vf)
     return o.astype(q.dtype)
 
 
 def paged_decode_attention_ref(q, k_pool, v_pool, page_table, pos, *,
+                               k_scale=None, k_zero=None, v_scale=None,
                                window: Optional[int] = None):
     """q: [B,K,G,hd]; k/v_pool: [P,ps,K,hd]; page_table: [B,NP]; pos: [B].
 
     Gathers each request's pages into a dense logical [B, NP*ps, K, hd]
     view and applies position masking — the allclose target for the
-    page-table-walking Pallas kernel.
+    page-table-walking Pallas kernel.  Optional scale sidecar pools
+    ([P,ps,K]) mark an int8 pool; they are gathered by the same table
+    and dequantized here.
     """
     B = q.shape[0]
     ps = k_pool.shape[1]
     NP = page_table.shape[1]
     hd = q.shape[-1]
     idx = jnp.maximum(page_table, 0)                          # [B,NP]
-    kg = k_pool[idx].reshape(B, NP * ps, *k_pool.shape[2:])
-    vg = v_pool[idx].reshape(B, NP * ps, *v_pool.shape[2:])
+
+    def gather(pool):
+        return pool[idx].reshape(B, NP * ps, *pool.shape[2:])
+
+    kg, vg = gather(k_pool), gather(v_pool)
+    if k_scale is not None:
+        kg = kv_quant.dequantize_k(kg, gather(k_scale), gather(k_zero))
+        vg = kv_quant.dequantize_v(vg, gather(v_scale))
     qf = q.astype(jnp.float32)
     s = jnp.einsum("bkgd,btkd->bkgt", qf, kg.astype(jnp.float32)) * hd ** -0.5
     t = jnp.arange(NP * ps)[None, :]

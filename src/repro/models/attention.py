@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import kv_quant as Q
 from repro.models import layers as L
 
 NEG_INF = -1e30
@@ -282,8 +283,15 @@ def attention_full(cfg: ModelConfig, p: Dict, x: jax.Array,
 # KV cache
 # ---------------------------------------------------------------------------
 
+def resolve_kv_dtype(cfg: ModelConfig, kv_dtype: Optional[str]) -> str:
+    kvd = kv_dtype or cfg.kv_dtype
+    assert kvd in ("model", "int8"), f"unknown kv_dtype {kvd!r}"
+    return kvd
+
+
 def kv_cache_def(cfg: ModelConfig, batch: int, capacity: int, dtype,
-                 seq_shard: bool = True) -> Dict:
+                 seq_shard: bool = True,
+                 kv_dtype: Optional[str] = None) -> Dict:
     """ShapeDtypeStruct-compatible cache spec for one attention layer.
 
     The capacity dim carries the ``kv_seq`` logical axis: GQA kv_heads
@@ -291,23 +299,33 @@ def kv_cache_def(cfg: ModelConfig, batch: int, capacity: int, dtype,
     sharded along *sequence* instead (flash-decoding layout; partial
     softmax combines become collectives).  For batch-1 long-context
     decode the same axis picks up the (pod, data) axes too.
+
+    ``kv_dtype`` (None = ModelConfig.kv_dtype): "int8" stores K/V
+    quantized with per-slot-per-head float32 scale sidecars ``ks``/``kz``
+    (asymmetric K) and ``vs`` (symmetric V) — kernels/kv_quant.py.
     """
     K, hd = cfg.num_kv_heads, cfg.head_dim
     seq_ax = "kv_seq" if seq_shard else None
-    return {
-        "k": L.ParamDef((batch, capacity, K, hd), ("batch", seq_ax, "kv_heads", None), dtype, init="zeros"),
-        "v": L.ParamDef((batch, capacity, K, hd), ("batch", seq_ax, "kv_heads", None), dtype, init="zeros"),
+    kv_axes = ("batch", seq_ax, "kv_heads", None)
+    d = {
+        "k": L.ParamDef((batch, capacity, K, hd), kv_axes, dtype, init="zeros"),
+        "v": L.ParamDef((batch, capacity, K, hd), kv_axes, dtype, init="zeros"),
         "tok": L.ParamDef((batch, capacity), ("batch", seq_ax), jnp.int32, init="zeros"),
     }
+    if resolve_kv_dtype(cfg, kv_dtype) == "int8":
+        for leaf in ("k", "v"):
+            d[leaf] = L.ParamDef(d[leaf].shape, kv_axes, jnp.int8, init="zeros")
+        sc_axes = ("batch", seq_ax, "kv_heads")
+        for leaf in ("ks", "kz", "vs"):
+            d[leaf] = L.ParamDef((batch, capacity, K), sc_axes, jnp.float32,
+                                 init="zeros")
+    return d
 
 
-def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> Dict:
-    K, hd = cfg.num_kv_heads, cfg.head_dim
-    return {
-        "k": jnp.zeros((batch, capacity, K, hd), dtype),
-        "v": jnp.zeros((batch, capacity, K, hd), dtype),
-        "tok": jnp.full((batch, capacity), -1, jnp.int32),
-    }
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype,
+                  kv_dtype: Optional[str] = None) -> Dict:
+    return L.init_empty_cache(
+        kv_cache_def(cfg, batch, capacity, dtype, kv_dtype=kv_dtype))
 
 
 def prefill_into_cache(cache: Dict, k: jax.Array, v: jax.Array,
@@ -329,13 +347,71 @@ def prefill_into_cache(cache: Dict, k: jax.Array, v: jax.Array,
     slot_b = jnp.broadcast_to(slot, (B, S))
     # Route dropped tokens to a scratch slot (C) and slice it off.
     slot_safe = jnp.where(keep, slot_b, C)
+    if "ks" in cache:                                   # quantized cache
+        k, ks, kz = Q.quantize_k(k)
+        v, vs = Q.quantize_v(v)
     k_new = jnp.zeros_like(cache["k"], shape=(B, C + 1) + cache["k"].shape[2:])
     v_new = jnp.zeros_like(k_new)
     tok_new = jnp.full((B, C + 1), -1, jnp.int32)
     k_new = k_new.at[b, slot_safe].set(k.astype(cache["k"].dtype))
     v_new = v_new.at[b, slot_safe].set(v.astype(cache["v"].dtype))
     tok_new = tok_new.at[b, slot_safe].set(jnp.where(keep, t, -1))
-    return {"k": k_new[:, :C], "v": v_new[:, :C], "tok": tok_new[:, :C]}
+    out = {"k": k_new[:, :C], "v": v_new[:, :C], "tok": tok_new[:, :C]}
+    if "ks" in cache:
+        Ksc = cache["ks"].shape[2]
+        for name, val in (("ks", ks), ("kz", kz), ("vs", vs)):
+            s_new = jnp.zeros((B, C + 1, Ksc), jnp.float32)
+            out[name] = s_new.at[b, slot_safe].set(val)[:, :C]
+    return out
+
+
+# --- factored dequant (int8 read path) -------------------------------------
+#
+# Dequantizing K before QK^T costs an O(T*hd) multiply-add per head; but
+#   q . ((kq + 128) * ks_t + kz_t)  ==  ks_t * (q . kq) + (128*ks_t + kz_t) * sum(q)
+# so the scales can be folded into the [.., T] score matrix AFTER the int8
+# matmul — hd/G times fewer elementwise ops (the XLA mirror of the
+# kernels' in-register dequant).  Same for V: fold vs_t into the softmax
+# weights instead of dequantizing the [T, hd] tile.  Ring and paged reads
+# share these helpers, so both layouts produce bit-identical scores for
+# identical cached values.
+
+
+def _quant_scores(q4: jax.Array, kq: jax.Array, ks: jax.Array,
+                  kz: jax.Array) -> jax.Array:
+    """q4: [B,K,G,hd]; kq: [B,T,K,hd] int8; ks/kz: [B,T,K].
+    Returns f32 scores [B,K,G,T] == q4 . dequant(kq)^T (unscaled)."""
+    s0 = jnp.einsum("bkgd,btkd->bkgt", q4,
+                    kq.astype(q4.dtype)).astype(jnp.float32)
+    qs = jnp.sum(q4.astype(jnp.float32), axis=-1)            # [B,K,G]
+    ksT = jnp.moveaxis(ks, 1, 2)[:, :, None, :]              # [B,K,1,T]
+    kzT = jnp.moveaxis(kz, 1, 2)[:, :, None, :]
+    return s0 * ksT + qs[..., None] * (128.0 * ksT + kzT)
+
+
+def _quant_scores_ext(q5: jax.Array, kq: jax.Array, ks: jax.Array,
+                      kz: jax.Array) -> jax.Array:
+    """q5: [B,S,K,G,hd]; kq: [B,T,K,hd] int8.  f32 [B,K,G,S,T]."""
+    s0 = jnp.einsum("bskgd,btkd->bkgst", q5,
+                    kq.astype(q5.dtype)).astype(jnp.float32)
+    qs = jnp.transpose(jnp.sum(q5.astype(jnp.float32), axis=-1),
+                       (0, 2, 3, 1))                         # [B,K,G,S]
+    ksT = jnp.moveaxis(ks, 1, 2)[:, :, None, None, :]        # [B,K,1,1,T]
+    kzT = jnp.moveaxis(kz, 1, 2)[:, :, None, None, :]
+    return s0 * ksT + qs[..., None] * (128.0 * ksT + kzT)
+
+
+def _quant_pv(prob: jax.Array, vq: jax.Array, vs: jax.Array) -> jax.Array:
+    """prob: [B,K,G,T]; vq: [B,T,K,hd] int8; vs: [B,T,K] -> [B,K,G,hd]."""
+    probv = prob * jnp.moveaxis(vs, 1, 2)[:, :, None, :].astype(prob.dtype)
+    return jnp.einsum("bkgt,btkd->bkgd", probv, vq.astype(prob.dtype))
+
+
+def _quant_pv_ext(prob: jax.Array, vq: jax.Array, vs: jax.Array) -> jax.Array:
+    """prob: [B,K,G,S,T]; vq: [B,T,K,hd] int8 -> [B,S,K,G,hd]."""
+    probv = prob * jnp.moveaxis(vs, 1, 2)[:, :, None, None, :].astype(
+        prob.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", probv, vq.astype(prob.dtype))
 
 
 def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
@@ -352,24 +428,45 @@ def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
     # select is elementwise, so every shard updates locally).
     slot = pos % C
     hit = jnp.arange(C)[None, :] == slot[:, None]              # [B, C]
-    cache = {
-        "k": jnp.where(hit[:, :, None, None],
-                       k[:, 0:1].astype(cache["k"].dtype), cache["k"]),
-        "v": jnp.where(hit[:, :, None, None],
-                       v[:, 0:1].astype(cache["v"].dtype), cache["v"]),
-        "tok": jnp.where(hit, pos[:, None], cache["tok"]),
-    }
+    if "ks" in cache:                                   # quantized ring
+        kq, ks, kz = Q.quantize_k(k[:, 0:1])
+        vq, vs = Q.quantize_v(v[:, 0:1])
+        cache = {
+            "k": jnp.where(hit[:, :, None, None], kq, cache["k"]),
+            "v": jnp.where(hit[:, :, None, None], vq, cache["v"]),
+            "ks": jnp.where(hit[:, :, None], ks, cache["ks"]),
+            "kz": jnp.where(hit[:, :, None], kz, cache["kz"]),
+            "vs": jnp.where(hit[:, :, None], vs, cache["vs"]),
+            "tok": jnp.where(hit, pos[:, None], cache["tok"]),
+        }
+    else:
+        cache = {
+            "k": jnp.where(hit[:, :, None, None],
+                           k[:, 0:1].astype(cache["k"].dtype), cache["k"]),
+            "v": jnp.where(hit[:, :, None, None],
+                           v[:, 0:1].astype(cache["v"].dtype), cache["v"]),
+            "tok": jnp.where(hit, pos[:, None], cache["tok"]),
+        }
     q = q.reshape(B, K, G, hd)
     scale = hd ** -0.5
-    scores = jnp.einsum("bkgd,btkd->bkgt", q, cache["k"].astype(x.dtype)) * scale
-    scores = scores.astype(jnp.float32)
+    quant = "ks" in cache
+    if quant:
+        scores = _quant_scores(q, cache["k"], cache["ks"],
+                               cache["kz"]) * scale
+    else:
+        scores = jnp.einsum("bkgd,btkd->bkgt", q,
+                            cache["k"].astype(x.dtype)) * scale
+        scores = scores.astype(jnp.float32)
     tok = cache["tok"]
     valid = (tok >= 0) & (tok <= pos[:, None])
     if window is not None:
         valid = valid & (tok > pos[:, None] - window)
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     prob = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkgt,btkd->bkgd", prob, cache["v"].astype(x.dtype))
+    if quant:
+        out = _quant_pv(prob, cache["v"], cache["vs"])
+    else:
+        out = jnp.einsum("bkgt,btkd->bkgd", prob, cache["v"].astype(x.dtype))
     out = out.reshape(B, 1, H, hd)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, cache
@@ -381,6 +478,13 @@ def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
 #
 # Layout per attention layer: ``{"kp": [P, ps, K, hd], "vp": [P, ps, K, hd]}``
 # — a POOL of P physical pages of ps tokens each, shared by every request.
+# With ``kv_dtype="int8"`` the pools are int8 and carry float32 scale
+# sidecar pools ``ksp``/``kzp``/``vsp`` ([P, ps, K]; asymmetric K,
+# symmetric V — kernels/kv_quant.py): quantized at write time in
+# ``_paged_write``, dequantized at read via the factored scale-fold
+# (``_quant_scores*`` / ``_quant_pv*``) or in-register in the Pallas
+# kernels.  The sidecars share the ``pages`` logical axis, so COW,
+# snapshot pins and nbytes accounting move scales with their pages.
 # There is no batch axis and no ``tok`` slot-index array: each request owns
 # a page table [NP] mapping logical page (position // ps) to a physical
 # page (-1 = unmapped), so a token's absolute position is explicit from its
@@ -392,22 +496,38 @@ def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
 
 
 def paged_kv_cache_def(cfg: ModelConfig, num_pages: int, page_size: int,
-                       dtype) -> Dict:
+                       dtype, kv_dtype: Optional[str] = None) -> Dict:
     """ShapeDtypeStruct-compatible page-pool spec for one attention layer.
 
     The leading ``pages`` logical axis is how the serving engine recognises
     pool leaves (no ``batch`` axis => shared across requests, snapshotted
     by page reference instead of by value).
+
+    ``kv_dtype`` (None = ModelConfig.kv_dtype): "int8" stores the pools
+    quantized, with float32 scale SIDECAR pools ``ksp``/``kzp``
+    (asymmetric K) and ``vsp`` (symmetric V) of shape
+    ``[num_pages, page_size, K]``.  The sidecars carry the same ``pages``
+    axis as the payload, so every pages-axis mechanism — COW page
+    copies, snapshot pins, per-page nbytes accounting — moves scales
+    with their pages without special cases.
     """
     K, hd = cfg.num_kv_heads, cfg.head_dim
-    return {
+    pool_dtype = (jnp.int8 if resolve_kv_dtype(cfg, kv_dtype) == "int8"
+                  else dtype)
+    d = {
         "kp": L.ParamDef((num_pages, page_size, K, hd),
-                         ("pages", None, "kv_heads", None), dtype,
+                         ("pages", None, "kv_heads", None), pool_dtype,
                          init="zeros"),
         "vp": L.ParamDef((num_pages, page_size, K, hd),
-                         ("pages", None, "kv_heads", None), dtype,
+                         ("pages", None, "kv_heads", None), pool_dtype,
                          init="zeros"),
     }
+    if pool_dtype == jnp.int8:
+        for leaf in ("ksp", "kzp", "vsp"):
+            d[leaf] = L.ParamDef((num_pages, page_size, K),
+                                 ("pages", None, "kv_heads"), jnp.float32,
+                                 init="zeros")
+    return d
 
 
 def _gather_pages(pool_leaf: jax.Array, page_table: jax.Array) -> jax.Array:
@@ -424,7 +544,19 @@ def _gather_pages(pool_leaf: jax.Array, page_table: jax.Array) -> jax.Array:
 def _paged_write(pool: Dict, k: jax.Array, v: jax.Array, phys: jax.Array,
                  off: jax.Array) -> Dict:
     """Scatter K/V into pool pages.  phys/off: [B] or [B,Sx] (phys >= P
-    drops the write — the route for pad lanes and unmapped positions)."""
+    drops the write — the route for pad lanes and unmapped positions).
+    Quantized pools (``ksp`` present) quantize HERE, at write time: the
+    scales land at the same (page, offset) as their int8 rows."""
+    if "ksp" in pool:
+        kq, ks, kz = Q.quantize_k(k)
+        vq, vs = Q.quantize_v(v)
+        return {
+            "kp": pool["kp"].at[phys, off].set(kq, mode="drop"),
+            "vp": pool["vp"].at[phys, off].set(vq, mode="drop"),
+            "ksp": pool["ksp"].at[phys, off].set(ks, mode="drop"),
+            "kzp": pool["kzp"].at[phys, off].set(kz, mode="drop"),
+            "vsp": pool["vsp"].at[phys, off].set(vs, mode="drop"),
+        }
     return {
         "kp": pool["kp"].at[phys, off].set(k.astype(pool["kp"].dtype),
                                            mode="drop"),
@@ -450,19 +582,31 @@ def attention_decode_paged(cfg: ModelConfig, p: Dict, x: jax.Array,
     phys = jnp.where(phys >= 0, phys, P)                # unmapped -> dropped
     pool = _paged_write(pool, k[:, 0], v[:, 0], phys, pos % ps)
 
-    kg = _gather_pages(pool["kp"], page_table).astype(x.dtype)  # [B,L,K,hd]
-    vg = _gather_pages(pool["vp"], page_table).astype(x.dtype)
     q = q.reshape(B, K, G, hd)
     scale = hd ** -0.5
-    scores = jnp.einsum("bkgd,btkd->bkgt", q, kg) * scale
-    scores = scores.astype(jnp.float32)
+    quant = "ksp" in pool
+    if quant:
+        kg = _gather_pages(pool["kp"], page_table)              # [B,L,K,hd]
+        scores = _quant_scores(q, kg,
+                               _gather_pages(pool["ksp"], page_table),
+                               _gather_pages(pool["kzp"], page_table)) * scale
+    else:
+        kg = _gather_pages(pool["kp"], page_table).astype(x.dtype)
+        scores = jnp.einsum("bkgd,btkd->bkgt", q, kg) * scale
+        scores = scores.astype(jnp.float32)
     t = jnp.arange(NP * ps)[None, :]
     valid = jnp.repeat(page_table >= 0, ps, axis=1) & (t <= pos[:, None])
     if window is not None:
         valid = valid & (t > pos[:, None] - window)
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     prob = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkgt,btkd->bkgd", prob, vg).reshape(B, 1, H, hd)
+    if quant:
+        out = _quant_pv(prob, _gather_pages(pool["vp"], page_table),
+                        _gather_pages(pool["vsp"], page_table))
+    else:
+        vg = _gather_pages(pool["vp"], page_table).astype(x.dtype)
+        out = jnp.einsum("bkgt,btkd->bkgd", prob, vg)
+    out = out.reshape(B, 1, H, hd)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, pool
 
@@ -494,12 +638,18 @@ def attention_extend_paged(cfg: ModelConfig, p: Dict, x: jax.Array,
     phys = jnp.where(keep, phys, P)                              # drop pads
     pool = _paged_write(pool, k, v, phys, positions % ps)
 
-    kg = _gather_pages(pool["kp"], page_table).astype(x.dtype)   # [B,L,K,hd]
-    vg = _gather_pages(pool["vp"], page_table).astype(x.dtype)
     q = q.reshape(B, Sx, K, G, hd)
     scale = hd ** -0.5
-    scores = jnp.einsum("bskgd,btkd->bkgst", q, kg) * scale
-    scores = scores.astype(jnp.float32)
+    quant = "ksp" in pool
+    if quant:
+        kg = _gather_pages(pool["kp"], page_table)               # [B,L,K,hd]
+        scores = _quant_scores_ext(
+            q, kg, _gather_pages(pool["ksp"], page_table),
+            _gather_pages(pool["kzp"], page_table)) * scale
+    else:
+        kg = _gather_pages(pool["kp"], page_table).astype(x.dtype)
+        scores = jnp.einsum("bskgd,btkd->bkgst", q, kg) * scale
+        scores = scores.astype(jnp.float32)
     t = jnp.arange(NP * ps)[None, None, :]
     attendable = (jnp.repeat(page_table >= 0, ps, axis=1)[:, None, :]
                   & (t <= positions[:, :, None]))
@@ -507,7 +657,13 @@ def attention_extend_paged(cfg: ModelConfig, p: Dict, x: jax.Array,
         attendable = attendable & (t > positions[:, :, None] - window)
     scores = jnp.where(attendable[:, None, None, :, :], scores, NEG_INF)
     prob = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkgst,btkd->bskgd", prob, vg).reshape(B, Sx, H, hd)
+    if quant:
+        out = _quant_pv_ext(prob, _gather_pages(pool["vp"], page_table),
+                            _gather_pages(pool["vsp"], page_table))
+    else:
+        vg = _gather_pages(pool["vp"], page_table).astype(x.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", prob, vg)
+    out = out.reshape(B, Sx, H, hd)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, pool
 
@@ -589,6 +745,24 @@ def _masked_ring_write(cache: Dict, k: jax.Array, v: jax.Array,
     onehot = ((positions[:, :, None] % C) == jnp.arange(C)[None, None, :]) \
         & keep[:, :, None]                                          # [B,Sx,C]
     written = jnp.any(onehot, axis=1)                               # [B,C]
+    if "ks" in cache:
+        # quantize, then route through the one-hot in float32: |q| <= 128
+        # is exactly representable, so the select stays lossless
+        kq, ks, kz = Q.quantize_k(k)
+        vq, vs = Q.quantize_v(v)
+        ohf = onehot.astype(jnp.float32)
+        out = {}
+        for name, val in (("k", kq), ("v", vq)):
+            sel = jnp.einsum("bsc,bskd->bckd", ohf, val.astype(jnp.float32))
+            out[name] = jnp.where(written[:, :, None, None],
+                                  sel.astype(jnp.int8), cache[name])
+        for name, val in (("ks", ks), ("kz", kz), ("vs", vs)):
+            sel = jnp.einsum("bsc,bsk->bck", ohf, val)
+            out[name] = jnp.where(written[:, :, None], sel, cache[name])
+        tok_new = jnp.sum(onehot.astype(jnp.int32) * positions[:, :, None],
+                          axis=1)
+        out["tok"] = jnp.where(written, tok_new, cache["tok"])
+        return out
     oh = onehot.astype(k.dtype)
     k_new = jnp.einsum("bsc,bskd->bckd", oh, k)
     v_new = jnp.einsum("bsc,bskd->bckd", oh, v)
@@ -628,18 +802,35 @@ def attention_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
     if valid is None:
         slots = positions % C                                       # [B,Sx]
         b = jnp.broadcast_to(jnp.arange(B)[:, None], (B, Sx))
-        cache = {
-            "k": cache["k"].at[b, slots].set(k.astype(cache["k"].dtype)),
-            "v": cache["v"].at[b, slots].set(v.astype(cache["v"].dtype)),
-            "tok": cache["tok"].at[b, slots].set(positions),
-        }
+        if "ks" in cache:
+            kq, ks, kz = Q.quantize_k(k)
+            vq, vs = Q.quantize_v(v)
+            cache = {
+                "k": cache["k"].at[b, slots].set(kq),
+                "v": cache["v"].at[b, slots].set(vq),
+                "ks": cache["ks"].at[b, slots].set(ks),
+                "kz": cache["kz"].at[b, slots].set(kz),
+                "vs": cache["vs"].at[b, slots].set(vs),
+                "tok": cache["tok"].at[b, slots].set(positions),
+            }
+        else:
+            cache = {
+                "k": cache["k"].at[b, slots].set(k.astype(cache["k"].dtype)),
+                "v": cache["v"].at[b, slots].set(v.astype(cache["v"].dtype)),
+                "tok": cache["tok"].at[b, slots].set(positions),
+            }
     else:
         cache = _masked_ring_write(cache, k, v, positions, valid)
     q = q.reshape(B, Sx, K, G, hd)
     scale = hd ** -0.5
-    scores = jnp.einsum("bskgd,btkd->bkgst", q,
-                        cache["k"].astype(x.dtype)) * scale
-    scores = scores.astype(jnp.float32)
+    quant = "ks" in cache
+    if quant:
+        scores = _quant_scores_ext(q, cache["k"], cache["ks"],
+                                   cache["kz"]) * scale
+    else:
+        scores = jnp.einsum("bskgd,btkd->bkgst", q,
+                            cache["k"].astype(x.dtype)) * scale
+        scores = scores.astype(jnp.float32)
     tok = cache["tok"]                                              # [B,C]
     # distinct name from the `valid` lane mask: this is the [B,Sx,C]
     # which-cache-slots-may-each-query-attend mask
@@ -650,8 +841,12 @@ def attention_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
                                    > positions[:, :, None] - window)
     scores = jnp.where(attendable[:, None, None, :, :], scores, NEG_INF)
     prob = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkgst,btkd->bskgd", prob,
-                     cache["v"].astype(x.dtype)).reshape(B, Sx, H, hd)
+    if quant:
+        out = _quant_pv_ext(prob, cache["v"], cache["vs"])
+    else:
+        out = jnp.einsum("bkgst,btkd->bskgd", prob,
+                         cache["v"].astype(x.dtype))
+    out = out.reshape(B, Sx, H, hd)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, cache
 

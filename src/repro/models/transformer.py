@@ -59,14 +59,16 @@ def block_def(cfg: ModelConfig, kind: str, dtype) -> Dict:
 
 
 def block_cache_def(cfg: ModelConfig, kind: str, batch: int, capacity: int,
-                    dtype, seq_shard: bool) -> Dict:
+                    dtype, seq_shard: bool, kv_dtype=None) -> Dict:
     if kind == "attn":
-        return A.kv_cache_def(cfg, batch, capacity, dtype, seq_shard)
+        return A.kv_cache_def(cfg, batch, capacity, dtype, seq_shard,
+                              kv_dtype)
     if kind == "rg_attn":
         return A.kv_cache_def(cfg, batch, min(capacity, cfg.local_window),
-                              dtype, seq_shard)
+                              dtype, seq_shard, kv_dtype)
     if kind == "moe":
-        return A.kv_cache_def(cfg, batch, capacity, dtype, seq_shard)
+        return A.kv_cache_def(cfg, batch, capacity, dtype, seq_shard,
+                              kv_dtype)
     if kind == "mamba":
         return M.mamba_cache_def(cfg, batch, dtype)
     if kind == "rglru":
@@ -75,12 +77,14 @@ def block_cache_def(cfg: ModelConfig, kind: str, batch: int, capacity: int,
 
 
 def block_cache_def_paged(cfg: ModelConfig, kind: str, batch: int,
-                          num_pages: int, page_size: int, dtype) -> Dict:
+                          num_pages: int, page_size: int, dtype,
+                          kv_dtype=None) -> Dict:
     """Paged variant: attention-bearing layers get a shared page POOL (no
     batch axis); recurrent layers keep their dense per-request O(1) state
     — paging only pays off where cache size grows with sequence length."""
     if kind in ("attn", "rg_attn", "moe"):
-        return A.paged_kv_cache_def(cfg, num_pages, page_size, dtype)
+        return A.paged_kv_cache_def(cfg, num_pages, page_size, dtype,
+                                    kv_dtype)
     if kind == "mamba":
         return M.mamba_cache_def(cfg, batch, dtype)
     if kind == "rglru":
@@ -120,39 +124,43 @@ class TransformerLM:
         w = self.cfg.sliding_window
         return min(max_seq, w) if w else max_seq
 
-    def cache_defs(self, batch: int, max_seq: int,
-                   seq_shard: bool = True) -> PyTree:
+    def cache_defs(self, batch: int, max_seq: int, seq_shard: bool = True,
+                   kv_dtype=None) -> PyTree:
         cfg = self.cfg
         cap = self.attn_capacity(max_seq)
         unit_caches = tuple(
-            block_cache_def(cfg, k, batch, cap, self.dtype, seq_shard)
+            block_cache_def(cfg, k, batch, cap, self.dtype, seq_shard,
+                            kv_dtype)
             for k in self.unit)
         return {
             "scan": (L.stack_defs(unit_caches, self.repeats)
                      if self.repeats > 1 else unit_caches),
             "tail": tuple(block_cache_def(cfg, k, batch, cap, self.dtype,
-                                          seq_shard) for k in self.tail),
+                                          seq_shard, kv_dtype)
+                          for k in self.tail),
         }
 
     def init_cache(self, batch: int, max_seq: int,
                    seq_shard: bool = True) -> PyTree:
         return L.init_empty_cache(self.cache_defs(batch, max_seq, seq_shard))
 
-    def cache_defs_paged(self, batch: int, num_pages: int,
-                         page_size: int) -> PyTree:
+    def cache_defs_paged(self, batch: int, num_pages: int, page_size: int,
+                         kv_dtype=None) -> PyTree:
         """Decode-cache defs with attention KV in a shared page pool
         (scan-stacked pools are [layers, P, ps, K, hd]); recurrent layers
-        keep their dense [batch, ...] state."""
+        keep their dense [batch, ...] state.  ``kv_dtype`` (None =
+        ModelConfig.kv_dtype): "int8" adds per-page scale sidecar pools."""
         cfg = self.cfg
         unit_caches = tuple(
             block_cache_def_paged(cfg, k, batch, num_pages, page_size,
-                                  self.dtype)
+                                  self.dtype, kv_dtype)
             for k in self.unit)
         return {
             "scan": (L.stack_defs(unit_caches, self.repeats)
                      if self.repeats > 1 else unit_caches),
             "tail": tuple(block_cache_def_paged(cfg, k, batch, num_pages,
-                                                page_size, self.dtype)
+                                                page_size, self.dtype,
+                                                kv_dtype)
                           for k in self.tail),
         }
 

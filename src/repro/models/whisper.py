@@ -151,12 +151,13 @@ class WhisperModel:
     # ---------------- caches ----------------------------------------------
 
     def cache_defs(self, batch: int, max_seq: int,
-                   seq_shard: bool = True) -> PyTree:
+                   seq_shard: bool = True, kv_dtype=None) -> PyTree:
         cfg = self.cfg
         F = cfg.encoder_seq
         K, hd = cfg.num_kv_heads, cfg.head_dim
         self_kv = L.stack_defs(
-            A.kv_cache_def(cfg, batch, max_seq, self.dtype, seq_shard),
+            A.kv_cache_def(cfg, batch, max_seq, self.dtype, seq_shard,
+                           kv_dtype),
             cfg.num_layers)
         cross = L.stack_defs({
             "xk": L.ParamDef((batch, F, K, hd), ("batch", None, "kv_heads", None),

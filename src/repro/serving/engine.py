@@ -83,6 +83,11 @@ class Engine:
         kinds = set(self.cfg.block_pattern)
         self.paged = bool(scfg.paged_kv
                           and hasattr(model, "cache_defs_paged"))
+        # KV storage dtype: ServeConfig overrides the model default.
+        # "model" keeps the PR-2 fp layout bit-identically; "int8"
+        # quantizes K/V pages at write time (scale sidecars travel with
+        # their pages — docs/SERVING.md#quantized-kv-cache-int8).
+        self.kv_dtype = scfg.kv_dtype or self.cfg.kv_dtype
         if self.paged:
             ps = scfg.page_size
             self.pages_per_seq = -(-S // ps)
@@ -94,7 +99,8 @@ class Engine:
             self.pool = PagePool(num_pages, ps)
             # logical page -> physical page, per slot (-1 = unmapped)
             self.page_tables = np.full((B, self.pages_per_seq), -1, np.int64)
-            defs = model.cache_defs_paged(B, num_pages, ps)
+            defs = model.cache_defs_paged(B, num_pages, ps,
+                                          kv_dtype=self.kv_dtype)
             # Paged lanes have no ring aliasing (every position is a
             # distinct page slot), so the mixed-step width is bounded only
             # by max_seq — no capacity clamp.
@@ -119,7 +125,8 @@ class Engine:
             self.pool = None
             self.page_tables = None
             self._window_free = None
-            defs = model.cache_defs(B, S, seq_shard=False)
+            defs = model.cache_defs(B, S, seq_shard=False,
+                                    kv_dtype=self.kv_dtype)
             # Mixed-step lane width: besides max_seq, it must never exceed
             # the smallest attention ring capacity — with more lanes than
             # slots a chunk would overwrite ring entries BEFORE its own
@@ -142,8 +149,10 @@ class Engine:
         # shared and masked by the page table, so the blank uses a
         # 1-page dummy pool that _set_slot_cache skips.
         self._blank_row = L.init_empty_cache(
-            model.cache_defs_paged(1, 1, 1) if self.paged
-            else model.cache_defs(1, S, seq_shard=False))
+            model.cache_defs_paged(1, 1, 1, kv_dtype=self.kv_dtype)
+            if self.paged
+            else model.cache_defs(1, S, seq_shard=False,
+                                  kv_dtype=self.kv_dtype))
         # bytes of one physical page across every layer's pool (snapshot
         # accounting)
         self._page_nbytes = 0

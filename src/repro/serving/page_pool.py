@@ -6,6 +6,13 @@ metadata: which physical pages are free, how many holders reference each
 page, and the copy-on-write bookkeeping that lets N requests (best-of-N
 fan-out, prefix-cache snapshots) map the same physical prefix pages.
 
+A "page" here is a PHYSICAL page id valid across every pool leaf of
+every layer — including, under ``kv_dtype="int8"``, the float32 scale
+sidecar pools that ride next to the int8 K/V payload.  Refcounts, COW
+copies, snapshot pins and per-page nbytes all operate on that id, so
+scales travel with their pages through every lifecycle event without
+this module knowing the cache dtype.
+
 Invariants (checked by :meth:`PagePool.check`):
   * every page is either on the free list (refcount 0) or held
     (refcount >= 1) — never both;

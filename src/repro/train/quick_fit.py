@@ -1,0 +1,53 @@
+"""Quickly fit a smoke model to +1 token ramps (a deterministic fixture).
+
+A randomly initialised LM has near-uniform logits: top-2 argmax gaps are
+O(1e-2), so ANY cache perturbation — including int8 KV quantization
+error — flips greedy tokens, which says nothing about the quantizer and
+everything about the degenerate fixture.  Real checkpoints have O(1)
+logit gaps.  This helper restores that property in a few seconds of CPU
+time: plain SGD on sequences ``[s, s+1, s+2, ...]`` teaches the model
+the successor function, after which greedy continuations of ramp
+prompts are sharply peaked and quantization parity becomes a meaningful
+token-for-token statement (tests/test_quant_kv.py, benchmarks/paged_kv.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ramp_prompt(start: int, n: int) -> list:
+    """The prompt family the fitted model continues confidently."""
+    return [1] + list(range(start, start + n - 1))
+
+
+def quick_fit_ramp(model, params, *, steps: int = 120, batch: int = 8,
+                   seq: int = 48, lr: float = 0.5, seed: int = 0):
+    """Returns params SGD-fitted so greedy continues ``ramp_prompt``s.
+
+    Deterministic for a fixed (model, params, steps, seed): every caller
+    gets the same fixture weights, so token-for-token assertions are
+    reproducible across test/benchmark processes.
+    """
+    vocab = model.cfg.vocab_size
+    assert seq + 1 < vocab, "ramp sequences must fit the vocab"
+
+    def loss_fn(p, toks):
+        logits, _ = model.forward(p, {"tokens": toks})
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        tgt = toks[:, 1:]
+        return -jnp.take_along_axis(lp, tgt[..., None], -1).mean()
+
+    @jax.jit
+    def step(p, toks):
+        _, g = jax.value_and_grad(loss_fn)(p, toks)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        starts = rng.integers(1, vocab - seq, batch)
+        toks = jnp.asarray(starts[:, None] + np.arange(seq)[None, :],
+                           jnp.int32)
+        params = step(params, toks)
+    return params
