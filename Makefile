@@ -1,4 +1,4 @@
-.PHONY: verify test bench
+.PHONY: verify test bench clean
 
 verify:
 	scripts/verify.sh
@@ -8,3 +8,11 @@ test:
 
 bench:
 	PYTHONPATH=src python benchmarks/run.py
+
+# Purge bytecode caches: stale __pycache__/*.pyc can shadow edited modules
+# when scripts are run directly (script-mode sys.path puts the script's
+# directory first, where a lingering cache of an old module wins).
+clean:
+	find . -name __pycache__ -type d -not -path './.git/*' -exec rm -rf {} +
+	find . -name '*.py[cod]' -not -path './.git/*' -delete
+	rm -rf .pytest_cache .hypothesis

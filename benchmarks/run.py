@@ -37,6 +37,7 @@ MODULES = [
     "benchmarks.chunked_prefill",
     "benchmarks.paged_kv",
     "benchmarks.kernels_micro",
+    "benchmarks.speculative",
 ]
 
 OUT_DIR = os.path.dirname(os.path.abspath(__file__))
@@ -49,7 +50,9 @@ if _ROOT not in sys.path:
 
 def write_results(all_rows, failures) -> None:
     """Persist the run next to this file: CSV (human diffable) + JSON
-    (machine-readable trajectory point)."""
+    (machine-readable trajectory point).  The JSON is MIRRORED to the
+    repo root (BENCH_results.json) — perf-trajectory tooling reads the
+    per-PR point there; benchmarks/ keeps the canonical pair."""
     ts = time.strftime("%Y-%m-%dT%H:%M:%S")
     with open(os.path.join(OUT_DIR, "BENCH_results.csv"), "w") as f:
         f.write("name,us_per_call,derived\n")
@@ -62,9 +65,10 @@ def write_results(all_rows, failures) -> None:
                      "derived": str(d), "timestamp": ts}
                     for n, us, d in all_rows],
     }
-    with open(os.path.join(OUT_DIR, "BENCH_results.json"), "w") as f:
-        json.dump(payload, f, indent=1)
-        f.write("\n")
+    for out_dir in (OUT_DIR, _ROOT):
+        with open(os.path.join(out_dir, "BENCH_results.json"), "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
 
 
 def main() -> None:

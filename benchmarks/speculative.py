@@ -1,0 +1,164 @@
+"""Self-speculative decoding benchmark: acceptance rate + decode
+throughput on a ROUND-2 REFLECTION workload, speculation on vs off
+(docs/SERVING.md#speculative-decoding).
+
+The workload is the paper's revision regime: round 1 generates an answer
+from a ramp prompt on a quickly-fitted smoke model (train/quick_fit.py —
+the fitted successor function stands in for a model that re-derives the
+same answer), then round 2's prompt quotes that answer and re-states the
+question, exactly like the Appendix A.2 reflection template.  Round 2's
+decode therefore re-emits tokens that already sit verbatim in its own
+context — the regime where the n-gram drafter finds long matches and the
+verify step accepts most lanes ("First Try Matters", arXiv:2510.08308).
+
+Measured on the REAL engine, A/B with identical requests:
+  * greedy outputs must match token-for-token (speculation is lossless);
+  * acceptance rate = accepted / drafted lanes across all verify steps;
+  * decode throughput = committed decode tokens / wall time of the pure
+    decode phase (prefill excluded), warm-compiled engines.
+
+Usage: PYTHONPATH=src python benchmarks/speculative.py [--smoke]
+``--smoke`` shrinks the workload for the scripts/verify.sh CI gate.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+from repro.configs.base import ServeConfig
+from repro.models.registry import build_model, get_smoke_config
+from repro.serving.engine import Engine
+from repro.serving.request import Request, Status
+from repro.train.quick_fit import quick_fit_reflect
+
+
+def _fitted_model(steps: int):
+    cfg = get_smoke_config("reflect_demo_100m").replace(dtype="float32")
+    m = build_model(cfg)
+    params = quick_fit_reflect(m, m.init(jax.random.PRNGKey(0)), steps=steps)
+    return m, params
+
+
+def _round1(m, params, prompts, *, new_tokens, scfg_kw):
+    """Round 1: plain generation — its outputs become the quoted drafts."""
+    eng = Engine(m, params, ServeConfig(**scfg_kw))
+    reqs = [Request(prompt=list(p), max_new_tokens=new_tokens, eos_id=None)
+            for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.status is Status.DONE for r in reqs)
+    return [list(r.output) for r in reqs]
+
+
+def _round2_decode(m, params, prompts, spec_contexts, *, spec, new_tokens,
+                   scfg_kw):
+    """Round 2 through one engine; returns (tok/s over the decode phase,
+    outputs, engine).  The engine is warmed with one identical pass so
+    the timed pass measures steps, not jit compiles."""
+    eng = Engine(m, params, ServeConfig(spec_decode=spec, **scfg_kw))
+
+    def load():
+        reqs = [Request(prompt=list(p), max_new_tokens=new_tokens,
+                        eos_id=None, spec_context=list(sc))
+                for p, sc in zip(prompts, spec_contexts)]
+        for r in reqs:
+            eng.submit(r)
+        while not all(r.status in (Status.DECODING, Status.DONE)
+                      for r in reqs):
+            eng.step()
+        ms0 = dict(eng.model_steps)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        ms = {k: v - ms0[k] for k, v in eng.model_steps.items()}
+        assert all(r.status is Status.DONE for r in reqs)
+        return (ms["decode_tokens"] / max(dt, 1e-9)), \
+            [list(r.output) for r in reqs], ms
+
+    load()                              # warm every compiled step shape
+    rate, outs, ms = load()             # timed pass: per-pass step deltas
+    return rate, outs, ms, eng
+
+
+def run(verbose: bool = True, smoke: bool = False):
+    # Geometry mirrors quick_fit_reflect's training distribution
+    # (question ~15 tokens, answer ~32, one [2] separator, re-quoted
+    # question): the fitted model re-derives round 1's answer with ~1.0
+    # greedy accuracy ONLY in-distribution, which is the point — the
+    # benchmark measures the engine's speculation machinery on traffic
+    # where revision/first-draft overlap is real, not the fixture's
+    # generalization.
+    m, params = _fitted_model(steps=300 if smoke else 400)
+    n_req, p_len, r1_tokens = 4, 16, 32
+    r2_tokens = 20 if smoke else 28
+    scfg_kw = dict(max_batch=n_req, max_seq=128, page_size=16,
+                   prefix_cache=False, spec_tokens=6)
+
+    prompts1 = [[1] + list(range(10 + 60 * i, 25 + 60 * i))
+                for i in range(n_req)]
+    assert all(len(p) == p_len for p in prompts1)
+    drafts1 = _round1(m, params, prompts1, new_tokens=r1_tokens,
+                      scfg_kw=scfg_kw)
+    # Appendix-A.2-shaped round 2: quote the draft, restate the question.
+    # The prompt ends on the question's ramp tail, so greedy round 2
+    # re-derives the round-1 answer — maximal context overlap.
+    prompts2 = [p + d + [2] + p for p, d in zip(prompts1, drafts1)]
+
+    results = {}
+    for spec in (False, True):
+        rate, outs, ms, eng = _round2_decode(
+            m, params, prompts2, drafts1, spec=spec, new_tokens=r2_tokens,
+            scfg_kw=scfg_kw)
+        results[spec] = (rate, outs, ms)
+        if eng.paged:
+            eng.pool.check()
+
+    rate_off, outs_off, _ = results[False]
+    rate_on, outs_on, ms = results[True]
+    assert outs_on == outs_off, \
+        "speculative greedy decode diverged from baseline"
+    drafted, accepted = ms["spec_drafted"], ms["spec_accepted"]
+    acc_rate = accepted / max(drafted, 1)
+    # committed decode tokens per MODEL CALL across the batch (the
+    # baseline's ceiling is n_req: one token per row per step)
+    toks_per_step = (ms["decode_tokens"]
+                     / max(ms["verify_steps"] + ms["decode_batch_steps"], 1))
+    speedup = rate_on / max(rate_off, 1e-9)
+
+    if verbose:
+        print(f"round-2 reflection decode ({n_req} x {len(prompts2[0])}-token"
+              f" prompts, {r2_tokens} new tokens, spec_tokens="
+              f"{scfg_kw['spec_tokens']}):")
+        print(f"  greedy outputs match baseline: True")
+        print(f"  acceptance: {accepted}/{drafted} drafted lanes "
+              f"({acc_rate:.2f}) over {ms['verify_steps']} verify steps; "
+              f"{toks_per_step:.1f} committed tokens/model call "
+              f"(baseline ceiling {n_req})")
+        print(f"  decode throughput: off {rate_off:.1f} tok/s -> "
+              f"on {rate_on:.1f} tok/s ({speedup:.2f}x)")
+    assert acc_rate >= 0.5, f"acceptance rate {acc_rate:.2f} < 0.5"
+    # Wall-clock floor only on the full run (the BENCH_results trajectory
+    # point): the --smoke CI gate runs on a loaded shared box where
+    # baseline decode rate itself swings several-fold between runs, so
+    # smoke asserts the deterministic properties (parity, acceptance)
+    # and reports throughput without gating on it.
+    if not smoke:
+        assert speedup >= 1.3, \
+            f"speculative decode speedup {speedup:.2f} < 1.3x"
+    return [
+        ("spec_decode_greedy_match", 0.0, "True"),
+        ("spec_decode_acceptance", 0.0, f"{acc_rate:.2f}"),
+        ("spec_decode_tokens_per_call", 0.0, f"{toks_per_step:.2f}"),
+        ("spec_decode_tok_s", 0.0, f"{rate_on:.1f}"),
+        ("spec_decode_vs_off", 0.0, f"{speedup:.2f}x"),
+    ]
+
+
+if __name__ == "__main__":
+    t0 = time.time()
+    for r in run(smoke="--smoke" in sys.argv):
+        print(",".join(map(str, r)))
+    print(f"speculative: OK ({time.time()-t0:.1f}s)")

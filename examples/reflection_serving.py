@@ -36,9 +36,14 @@ def main():
                             ("exec", ExecutionFeedback())):
             if rounds == 0 and fb_name == "exec":
                 continue
+            # spec_decode: reflection rounds re-emit most of the prior
+            # draft, so the n-gram drafter + verify step turn that overlap
+            # into multi-token decode steps (greedy output is unchanged —
+            # acceptance is printed below); EngineBackend feeds each
+            # round's raw draft to the next round's speculator.
             engine = Engine(model, params,
                             ServeConfig(max_batch=4, max_seq=1536,
-                                        page_size=32))
+                                        page_size=32, spec_decode=True))
             ctrl = ReflectionController(InferenceStrategy(rounds,
                                                           feedback=fb_name),
                                         feedback=fb)
@@ -52,9 +57,13 @@ def main():
                 usage_out += res.usage.output_tokens
                 dollars += cost.cost(res.usage)
                 seconds += lat.latency(res.usage)
+            ms = engine.model_steps
+            spec = (f"  [spec: {ms['spec_accepted']}/{ms['spec_drafted']} "
+                    f"drafts accepted, {ms['verify_steps']} verify steps]"
+                    if ms["spec_drafted"] else "")
             print(f"reflect{rounds:<9d}{fb_name:10s}{usage_in:9d}"
                   f"{usage_cached:8d}{usage_out:6d}{dollars:10.6f}"
-                  f"{seconds:8.2f}")
+                  f"{seconds:8.2f}{spec}")
     print("\n(untrained weights: accuracy is noise; the table demonstrates "
           "the engine's reflection/caching/accounting machinery)")
 

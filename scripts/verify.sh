@@ -19,4 +19,11 @@ python benchmarks/engine_micro.py
 echo "== smoke: benchmarks/paged_kv.py --smoke (paged + int8 KV) =="
 python benchmarks/paged_kv.py --smoke
 
+# Self-speculative decoding smoke: n-gram drafting + batched verify on a
+# round-2 reflection workload — asserts greedy parity with speculation
+# off and a real acceptance rate; throughput is reported (the >=1.3x
+# floor is enforced by the full `make bench` run, not this noisy box).
+echo "== smoke: benchmarks/speculative.py --smoke (spec decode) =="
+python benchmarks/speculative.py --smoke
+
 echo "verify: OK"

@@ -203,3 +203,28 @@ class ServeConfig:
     # Snapshot partial prefixes into the prefix cache at page-aligned
     # chunk boundaries (concurrent same-prompt requests hit mid-prefill).
     cache_prefill_chunks: bool = True
+
+    # ---- self-speculative decoding (docs/SERVING.md) ----------------------
+    # Draft-free speculation for decode rows: a host-side n-gram drafter
+    # (serving/speculator.py) proposes up to ``spec_tokens`` continuation
+    # tokens per row by prompt-lookup over the request's own context
+    # (prompt + prior output + Request.spec_context), and one jitted
+    # VERIFY step scores all 1+spec_tokens lanes in a single model call,
+    # committing the longest accepted prefix plus one model-sampled
+    # token.  Greedy output is bit-identical to non-speculative decode;
+    # temperature rows use exact rejection sampling.  Auto-disabled for
+    # recurrent-state models (mamba/RG-LRU state cannot be rolled back)
+    # and for window-capped ring caches (a rejected lane's ring write
+    # evicts a live token) — paged engines (the default) support every
+    # attention/MoE arch.  Drafted lanes count against
+    # prefill_token_budget (and are trimmed so prefilling rows always
+    # keep >= 1 budget token), bounding per-step work without starving
+    # prefill.  A larger budget leaves more room for full-length drafts
+    # alongside prefill chunks.
+    spec_decode: bool = False
+    # Max drafted tokens per decode row per verify step (the verify step
+    # is a fixed [max_batch, 1 + spec_tokens] compiled shape).
+    spec_tokens: int = 4
+    # Longest / shortest suffix n-gram the drafter tries to match.
+    spec_ngram: int = 3
+    spec_ngram_min: int = 1

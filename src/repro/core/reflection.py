@@ -13,6 +13,7 @@ The reflection prompt template mirrors Appendix A.2 verbatim.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -61,13 +62,27 @@ class EngineBackend:
         self.engine = engine
         self.tok = tokenizer
         self.max_new_tokens = max_new_tokens
+        # per-conversation raw draft tokens from prior rounds, fed to the
+        # engine's n-gram speculator (Request.spec_context): round r+1
+        # mostly re-emits round r's answer ("First Try Matters"), so the
+        # prior drafts are the highest-yield lookup corpus — and unlike
+        # the quoted text in the prompt, the RAW token stream survives
+        # truncation and lossy detokenization.  Purely advisory: the
+        # verify step accepts only model-confirmed tokens.  LRU-bounded
+        # (latest round per conversation, oldest conversations evicted)
+        # so a long-lived backend never retains every conversation ever
+        # — mirroring the engine's own request-registry pruning.
+        self._prior_drafts: "OrderedDict[str, List[int]]" = OrderedDict()
+        self._prior_drafts_max = 128
 
     def _request(self, conversation: str, conversation_id: str,
                  budget: BudgetTier) -> Request:
         return Request(prompt=self.tok.encode(conversation),
                        max_new_tokens=self.max_new_tokens,
                        eos_id=self.tok.eos_id, budget=budget,
-                       conversation_id=conversation_id)
+                       conversation_id=conversation_id,
+                       spec_context=list(
+                           self._prior_drafts.get(conversation_id, [])))
 
     def _decode_output(self, req: Request) -> str:
         out = req.output
@@ -94,6 +109,14 @@ class EngineBackend:
             self.engine.poll()
             done = {r.uid for r in reqs if r.status is Status.DONE}
             pending -= done
+        for (_, cid), r in zip(conversations, reqs):
+            # remember this round's raw draft for the next round's
+            # speculator (latest round per conversation; LRU-evicted)
+            if r.conversation_id is not None:
+                self._prior_drafts[cid] = list(r.output)
+                self._prior_drafts.move_to_end(cid)
+                while len(self._prior_drafts) > self._prior_drafts_max:
+                    self._prior_drafts.popitem(last=False)
         return [(self._decode_output(r), r.usage) for r in reqs]
 
 

@@ -546,7 +546,20 @@ def _paged_write(pool: Dict, k: jax.Array, v: jax.Array, phys: jax.Array,
     """Scatter K/V into pool pages.  phys/off: [B] or [B,Sx] (phys >= P
     drops the write — the route for pad lanes and unmapped positions).
     Quantized pools (``ksp`` present) quantize HERE, at write time: the
-    scales land at the same (page, offset) as their int8 rows."""
+    scales land at the same (page, offset) as their int8 rows.
+
+    VERIFY-WRITE-THEN-TRUNCATE (speculative decoding): the engine's
+    verify step writes drafted tokens here BEFORE knowing whether they
+    are accepted.  Rejection needs no device-side undo because (a) every
+    read path masks by absolute position (``t <= pos``), so positions
+    past the committed frontier are never attended, and (b) the engine
+    always re-writes positions from the committed frontier forward at
+    the start of the next step — the scatter is write-before-read within
+    a step — so a rejected position is overwritten before any query
+    position could reach it.  Distinct positions map to distinct
+    (page, offset) slots (no ring aliasing), which is why paged engines
+    can speculate for every attention/MoE arch; the host merely truncates
+    page-table tails (serving/page_pool.py::truncate_tail)."""
     if "ksp" in pool:
         kq, ks, kz = Q.quantize_k(k)
         vq, vs = Q.quantize_v(v)
@@ -733,6 +746,16 @@ def _masked_ring_write(cache: Dict, k: jax.Array, v: jax.Array,
     never forces GSPMD resharding, mirroring the decode-path write.  When
     Sx exceeds the ring capacity, two lanes can alias one slot; the later
     lane wins (the earlier token has already left the window).
+
+    Speculative verify writes follow the same write-then-mask rollback
+    contract as ``_paged_write``: rejected lanes leave ``tok`` entries at
+    positions past the committed frontier, which every read masks
+    (``tok <= pos``) and the next step overwrites.  BUT a ring slot write
+    at position p EVICTS position p - C; when C is window-clamped the
+    evicted token may still be attendable after a rejection rolls the
+    frontier back, so the engine only enables speculation on rings whose
+    capacity equals max_seq (no aliasing) — paged caches have no such
+    hazard.
     """
     B, Sx = positions.shape
     C = cache["k"].shape[1]

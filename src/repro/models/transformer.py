@@ -124,6 +124,11 @@ class TransformerLM:
         w = self.cfg.sliding_window
         return min(max_seq, w) if w else max_seq
 
+    # prefill_extend accepts all_logits=True (speculative verify step);
+    # models without the flag (e.g. whisper's encoder-decoder) are
+    # excluded from speculation by the engine via this marker.
+    supports_verify = True
+
     def cache_defs(self, batch: int, max_seq: int, seq_shard: bool = True,
                    kv_dtype=None) -> PyTree:
         cfg = self.cfg
@@ -344,7 +349,8 @@ class TransformerLM:
     def prefill_extend(self, params: PyTree, cache: PyTree, tokens: jax.Array,
                        pos0: jax.Array,
                        n_valid: Optional[jax.Array] = None,
-                       page_table: Optional[jax.Array] = None
+                       page_table: Optional[jax.Array] = None,
+                       all_logits: bool = False
                        ) -> Tuple[jax.Array, PyTree]:
         """Prefill a token SUFFIX on top of a cached prefix.
 
@@ -364,6 +370,16 @@ class TransformerLM:
         ``page_table`` ([B, NP] int32) selects the PAGED write/read path
         for attention layers (cache leaves are shared page pools); the
         same table serves every layer.
+
+        ``all_logits`` (static) returns logits at EVERY lane
+        ([B, Sx, V] instead of [B, V]) — the serving engine's
+        speculative VERIFY step: lane i's logits are the next-token
+        distribution after position pos0+i, so one call scores a whole
+        drafted continuation.  Logits at invalid lanes (>= n_valid) are
+        meaningless and must be ignored by the caller.  The unembed cost
+        grows with Sx, which is why verify steps use a narrow dedicated
+        width (1 + ServeConfig.spec_tokens) rather than riding the wide
+        prefill-chunk shape.
         """
         x = self.embed(params, tokens)
         valid = None
@@ -390,7 +406,9 @@ class TransformerLM:
                                             page_table)
             tail_caches.append(c)
         x = L.rmsnorm(params["ln_f"], x, self.cfg.norm_eps)
-        if n_valid is None:
+        if all_logits:
+            logits = self.unembed(params, x)                    # [B, Sx, V]
+        elif n_valid is None:
             logits = self.unembed(params, x[:, -1])
         else:
             last = jnp.take_along_axis(

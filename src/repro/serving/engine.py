@@ -35,6 +35,24 @@ instead of fixed ring capacity:
     freed and it is requeued (never dropped), replaying prompt+output on
     re-admission so generation continues where it left off.
 
+SELF-SPECULATIVE DECODING (``ServeConfig.spec_decode``;
+docs/SERVING.md#speculative-decoding): reflection-round revisions overlap
+heavily with the draft they revise, so a host-side n-gram drafter
+(serving/speculator.py) proposes up to ``spec_tokens`` continuation
+tokens per decode row by prompt-lookup over the request's own context,
+and a third compiled step shape — the VERIFY step, ``prefill_extend(...,
+all_logits=True)`` at width ``[max_batch, 1 + spec_tokens]`` — scores
+all lanes in one model call.  The longest accepted prefix commits
+(greedy: exact match, bit-identical to non-speculative decode;
+temperature: exact rejection sampling in serving/sampler.py); rejected
+lanes roll back by truncating page-table tails (pool invariants hold —
+``PagePool.truncate_tail``) while their KV residue stays masked by
+absolute position until overwritten.  Only committed tokens are billed,
+and prefix snapshots publish only at accepted watermarks.  Drafted
+lanes are charged against ``prefill_token_budget`` and prefill chunks
+ride the verify step at its narrow width, so mixed draft/verify/prefill
+steps stay bounded.
+
 Recurrent layers (mamba/RG-LRU) have O(1) state with no paged
 representation; they keep dense per-slot state and ride along in the
 same cache pytree, and hybrid-model snapshots carry that state next to
@@ -60,6 +78,7 @@ from repro.serving import sampler
 from repro.serving.page_pool import PagePool, PagedSnapshot
 from repro.serving.prefix_cache import (PrefixCache, config_is_recurrent)
 from repro.serving.request import BudgetTier, Request, Status, TokenUsage
+from repro.serving.speculator import NGramSpeculator, draft_corpus
 
 PyTree = Any
 
@@ -138,8 +157,27 @@ class Engine:
             if "rg_attn" in kinds:
                 cap = min(cap, self.cfg.local_window)
             self.chunk = max(1, min(scfg.prefill_chunk, cap))
+            self._ring_cap = cap
         # Per-step fresh-prefill token budget.
         self.prefill_budget = max(1, scfg.prefill_token_budget)
+
+        # ---- self-speculative decoding (docs/SERVING.md) ------------------
+        # Gates, in order: the model must expose the all-lane verify path
+        # (prefill_extend(..., all_logits=True)); recurrent state (mamba/
+        # RG-LRU) mutates irreversibly, so a rejected draft could not be
+        # rolled back; a capacity-clamped RING cache is unsafe because a
+        # rejected lane's ring write EVICTS a live in-window token (paged
+        # caches have no aliasing — every position owns a distinct
+        # (page, offset) slot — so the default engine supports every
+        # attention/MoE arch).
+        self.spec = (bool(scfg.spec_decode)
+                     and getattr(model, "supports_verify", False)
+                     and not self._has_state
+                     and (self.paged or self._ring_cap == S))
+        self.spec_tokens = max(1, min(scfg.spec_tokens, S - 1))
+        self.speculator = (NGramSpeculator(scfg.spec_ngram,
+                                           scfg.spec_ngram_min)
+                          if self.spec else None)
 
         self.cache_defs = defs
         self.cache = L.init_empty_cache(defs)
@@ -179,9 +217,12 @@ class Engine:
         self._pending_copies: List[Tuple[int, int]] = []   # COW (src, dst)
         self.model_steps = {"prefill_tokens": 0, "extend_tokens": 0,
                             "decode_steps": 0, "decode_batch_steps": 0,
+                            "decode_tokens": 0,
                             "mixed_steps": 0, "prefill_chunks": 0,
                             "max_step_prefill_tokens": 0, "preemptions": 0,
-                            "starved_mixed_steps": 0}
+                            "starved_mixed_steps": 0,
+                            "verify_steps": 0, "spec_drafted": 0,
+                            "spec_accepted": 0}
 
         if self.paged:
             self._decode = jax.jit(
@@ -193,12 +234,23 @@ class Engine:
                     p, c, t, pos0, n_valid=nv, page_table=pt),
                 donate_argnums=(1,))
             self._copy = jax.jit(self._copy_pages_fn, donate_argnums=(0,))
+            if self.spec:
+                self._verify = jax.jit(
+                    lambda p, c, t, pos0, nv, pt: model.prefill_extend(
+                        p, c, t, pos0, n_valid=nv, page_table=pt,
+                        all_logits=True),
+                    donate_argnums=(1,))
         else:
             self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
             self._mixed = jax.jit(
                 lambda p, c, t, pos0, nv: model.prefill_extend(
                     p, c, t, pos0, n_valid=nv),
                 donate_argnums=(1,))
+            if self.spec:
+                self._verify = jax.jit(
+                    lambda p, c, t, pos0, nv: model.prefill_extend(
+                        p, c, t, pos0, n_valid=nv, all_logits=True),
+                    donate_argnums=(1,))
 
     # ------------------------------------------------------------------ API
 
@@ -404,11 +456,16 @@ class Engine:
                 self.pool.decref([pg])
                 self.page_tables[slot, lpage] = -1
 
-    def _ensure_decode_pages(self) -> None:
-        """Every DECODING row writes one token this step; make its page
-        writable first (a fresh page at each page boundary, a COW copy at
-        the first write past a shared prefix).  Oldest rows first so pool
-        pressure preempts the youngest."""
+    def _ensure_decode_pages(self, drafts: Optional[Dict[int, List[int]]]
+                             = None) -> None:
+        """Every DECODING row writes one token this step — plus its
+        drafted continuation when speculating; make those pages writable
+        first (a fresh page at each page boundary, a COW copy at the
+        first write past a shared prefix).  Oldest rows first so pool
+        pressure preempts the youngest.  Under pressure a row's DRAFT
+        shrinks to the tokens its pages can actually back — the
+        committed-token lane always comes first, so speculation degrades
+        to plain decode before anyone is preempted for draft pages."""
         rows = sorted(
             (i for i, r in enumerate(self.slots)
              if r is not None and r.status is Status.DECODING),
@@ -416,9 +473,19 @@ class Engine:
         for slot in rows:
             if self.slots[slot] is None:               # preempted meanwhile
                 continue
-            if self._ensure_range(slot, int(self.pos[slot]), 1) == 0:
+            d = drafts.get(slot) if drafts else None
+            want = 1 + (len(d) if d else 0)
+            got = self._ensure_range(slot, int(self.pos[slot]), want)
+            if got == 0:
                 # nothing reclaimable: this row itself must wait its turn
                 self._preempt_slot(slot)
+                if drafts:
+                    drafts.pop(slot, None)
+            elif d and got < want:
+                if got <= 1:
+                    drafts.pop(slot)
+                else:
+                    drafts[slot] = d[:got - 1]
 
     # ---------------------------------------------- snapshots (paged+ring)
 
@@ -594,16 +661,72 @@ class Engine:
             req.prefill_pos = cached
             req.cached_len = cached
 
-    def _plan_chunks(self) -> Dict[int, int]:
+    def _make_drafts(self) -> Dict[int, List[int]]:
+        """Prompt-lookup drafting for every DECODING row (host-side, no
+        device work).  Per-row draft length is clamped so speculation can
+        never overshoot the row's output budget (a too-long draft would
+        emit tokens past the cap — billing corruption), nor write past
+        max_seq.  Drafted lanes count against the per-step token budget
+        (the planner sees the remainder), bounding verify-step work the
+        same way prefill chunks are bounded."""
+        drafts: Dict[int, List[int]] = {}
+        for slot, req in enumerate(self.slots):
+            if req is None or req.status is not Status.DECODING:
+                continue
+            # rem bounds the draft so at most one lane is wasted at the
+            # cap (emission stops exactly at the cap — _postprocess_verify
+            # discards, and never bills, tokens past a mid-step finish)
+            rem = self._budget_cap(req) - len(req.output)
+            kmax = min(self.spec_tokens, rem,
+                       self.scfg.max_seq - 1 - int(self.pos[slot]))
+            if kmax <= 0:
+                continue
+            d = self.speculator.propose(
+                draft_corpus(req.prompt, req.output, req.spec_context), kmax)
+            if d:
+                drafts[slot] = d
+        return drafts
+
+    def _clamp_drafts_to_budget(self, drafts: Dict[int, List[int]]) -> None:
+        """Shrink drafted lanes so the step token budget is never fully
+        consumed by speculation while a request is PREFILLING: at least
+        one budget token must survive for the planner, preserving the
+        non-speculative guarantee that a prefilling row makes >= 1 token
+        of progress per step (youngest drafted rows lose lanes first —
+        the same age order preemption uses)."""
+        cap = self.prefill_budget
+        if any(r is not None and r.status is Status.PREFILLING
+               for r in self.slots):
+            cap -= 1
+        total = sum(len(d) for d in drafts.values())
+        if total <= cap:
+            return
+        for slot in sorted(drafts,
+                           key=lambda s: -self.slots[s].admit_seq):
+            cut = min(len(drafts[slot]), total - cap)
+            total -= cut
+            if cut == len(drafts[slot]):
+                del drafts[slot]
+            else:
+                drafts[slot] = drafts[slot][:len(drafts[slot]) - cut]
+            if total <= cap:
+                return
+
+    def _plan_chunks(self, width: Optional[int] = None,
+                     budget: Optional[int] = None) -> Dict[int, int]:
         """Token-budget admission of prefill work into this step: each
         PREFILLING slot gets min(chunk, remaining, budget-left) lanes,
         oldest admission first — so a request can never be starved by
         newer arrivals landing in lower-numbered slots.  In paged mode
         each chunk additionally shrinks to the tokens whose pages are
         actually allocatable right now (free-page admission control);
-        allocation itself may evict snapshots or preempt younger rows."""
+        allocation itself may evict snapshots or preempt younger rows.
+        ``width``/``budget`` override the defaults when prefill rides a
+        VERIFY step: chunks are clamped to the narrow verify width and
+        to the budget left after drafted lanes."""
         plan: Dict[int, int] = {}
-        budget = self.prefill_budget
+        width = self.chunk if width is None else width
+        budget = self.prefill_budget if budget is None else budget
         waiting = sorted(
             (i for i, r in enumerate(self.slots)
              if r is not None and r.status is Status.PREFILLING),
@@ -614,7 +737,7 @@ class Engine:
             req = self.slots[slot]
             if req is None or req.status is not Status.PREFILLING:
                 continue                  # preempted during an earlier alloc
-            n = min(self.chunk, req.prefill_remaining, budget)
+            n = min(width, req.prefill_remaining, budget)
             if n > 0 and self.paged:
                 n = self._ensure_range(slot, req.prefill_pos, n)
             if n > 0:
@@ -673,11 +796,64 @@ class Engine:
         req.output.append(tok)
         req.usage.output_tokens += 1
         req.decode_steps += 1
+        self.model_steps["decode_tokens"] += 1
         self.pos[slot] += 1
         self.next_token[slot] = tok
         if self.paged and self.slots[slot] is not None:
             self._free_out_of_window(slot, int(self.pos[slot]))
         self._maybe_finish(slot)
+
+    def _postprocess_verify(self, slot: int, n_emit: int,
+                            emit_row: np.ndarray, drafted: int) -> None:
+        """Commit one decode row's verify-step outcome: the accepted
+        draft prefix plus the model-sampled bonus/corrected token, then
+        ROLL BACK everything the step wrote past the committed frontier.
+
+        Billing: only committed tokens touch TokenUsage.  Rejected
+        drafts were model work, not user output — they appear in
+        spec_drafted/spec_accepted stats, never in output_tokens (the
+        paper's cost axis is accepted-token billing).  Emission stops
+        early at eos or the output cap, so a long accepted draft can
+        never overshoot the row's budget.
+
+        Rollback: the KV written for rejected lanes sits at positions
+        strictly beyond the new committed frontier ``pos``.  Every read
+        path masks by absolute position (tok <= pos ring / t <= pos
+        paged) and every future step rewrites positions from ``pos``
+        forward BEFORE attending, so stale entries are unobservable
+        (models/attention.py).  The only durable residue is page-table
+        tail pages mapped for rejected positions — truncated here via
+        PagePool.truncate_tail so pool accounting reflects committed
+        tokens only.  Prefix-cache snapshots are published exclusively
+        at accepted watermarks (_maybe_finish covers prompt+output[:-1],
+        all committed), so no snapshot can ever pin a rolled-back
+        position as reusable content."""
+        req = self.slots[slot]
+        P = int(self.pos[slot])
+        req.spec_drafted += drafted
+        req.spec_accepted += n_emit - 1
+        req.decode_steps += 1
+        self.model_steps["spec_drafted"] += drafted
+        self.model_steps["spec_accepted"] += n_emit - 1
+        for i in range(n_emit):
+            tok = int(emit_row[i])
+            req.output.append(tok)
+            req.usage.output_tokens += 1
+            self.model_steps["decode_tokens"] += 1
+            self.pos[slot] = P + i + 1
+            self.next_token[slot] = tok
+            self._maybe_finish(slot)
+            if self.slots[slot] is None:      # finished (eos / cap) — the
+                return                        # pages are already released
+        if self.paged:
+            # free tail pages holding ONLY rejected draft positions; the
+            # page containing the committed frontier stays (next step's
+            # write lands there, and it may hold committed tokens)
+            ps = self.pool.page_size
+            keep = int(self.pos[slot]) // ps + 1
+            if (P + drafted) // ps >= keep:
+                self.pool.truncate_tail(self.page_tables[slot], keep)
+            self._free_out_of_window(slot, int(self.pos[slot]))
 
     def step(self) -> bool:
         """One scheduler tick.  Returns False when fully idle."""
@@ -689,19 +865,35 @@ class Engine:
             return bool(self.queue)
 
         self._fast_forward()
+        # speculative drafts first: decode rows outrank prefill for both
+        # pages and the step token budget (same decode-first policy as
+        # _ensure_decode_pages) — but drafts never eat the WHOLE budget
+        # while someone is prefilling (_clamp_drafts_to_budget), so a
+        # prefilling row keeps the non-spec guarantee of >=1 token of
+        # progress per step and can never be starved by speculation
+        drafts = self._make_drafts() if self.spec else {}
+        if drafts:
+            self._clamp_drafts_to_budget(drafts)
         if self.paged:
             # page admission control: decode rows first (they always get
-            # their one page, preempting the youngest under pressure),
-            # then prefill chunks sized to the allocatable pages
-            self._ensure_decode_pages()
-            plan = self._plan_chunks()
+            # their committed-token page — drafts shrink before anyone is
+            # preempted), then prefill chunks sized to allocatable pages
+            self._ensure_decode_pages(drafts)
+        plan = self._plan_chunks(
+            width=min(self.chunk, 1 + self.spec_tokens) if drafts else None,
+            budget=(self.prefill_budget
+                    - sum(len(d) for d in drafts.values()))
+            if drafts else None)
+        if self.paged:
             self._flush_copies()
             pt = jnp.asarray(self.page_tables, jnp.int32)
         else:
-            plan = self._plan_chunks()
             pt = None
         decode_rows = [i for i, r in enumerate(self.slots)
                        if r is not None and r.status is Status.DECODING]
+        drafts = {s: d for s, d in drafts.items()
+                  if self.slots[s] is not None
+                  and self.slots[s].status is Status.DECODING}
         if not plan and not decode_rows:
             # pool pressure can leave a step with nothing runnable (all
             # rows preempted or waiting on pages freed next tick)
@@ -710,6 +902,15 @@ class Engine:
                       for r in self.slots) and not plan
         if starved:
             self.model_steps["starved_mixed_steps"] += 1
+
+        if drafts:
+            # VERIFY step: the engine's third compiled shape
+            # [B, 1 + spec_tokens] with per-lane logits.  Decode rows
+            # carry [committed token, draft...] lanes; prefill rows ride
+            # with chunks clamped to the verify width (planned above
+            # under the shared token budget); starved prefill rows ride
+            # as nv=0 no-op lanes exactly as in the mixed step.
+            return self._verify_step(plan, decode_rows, drafts, pt)
 
         if not plan and not starved:
             # decode fast path: dedicated [B, 1] step, no masked lanes.
@@ -759,4 +960,62 @@ class Engine:
             self._postprocess_prefill(slot, n, sampled)
         for slot in decode_rows:
             self._postprocess_decode(slot, sampled)
+        return True
+
+    def _verify_step(self, plan: Dict[int, int], decode_rows: List[int],
+                     drafts: Dict[int, List[int]], pt) -> bool:
+        """One speculative verify step (docs/SERVING.md#speculative-decoding):
+        score every row's committed token + drafted continuation in a
+        single masked multi-token model call, then commit the longest
+        accepted prefix per row.  Decode rows without a draft ride as
+        nv=1 (plain decode with verify-lane logits — same argmax), and
+        prefill rows consume their planned chunks; the call returns
+        logits for EVERY lane so acceptance is decided host-side from
+        one device round-trip."""
+        B, W = len(self.slots), 1 + self.spec_tokens
+        toks = np.zeros((B, W), np.int32)
+        pos0 = np.zeros(B, np.int32)
+        nv = np.zeros(B, np.int32)
+        ndraft = np.zeros(B, np.int32)
+        for slot in decode_rows:
+            d = drafts.get(slot, [])
+            toks[slot, 0] = self.next_token[slot]
+            if d:
+                toks[slot, 1:1 + len(d)] = d
+            pos0[slot] = self.pos[slot]
+            nv[slot] = 1 + len(d)
+            ndraft[slot] = len(d)
+        for slot, n in plan.items():
+            req = self.slots[slot]
+            target = req.prefill_target
+            toks[slot, :n] = target[req.prefill_pos:req.prefill_pos + n]
+            pos0[slot] = req.prefill_pos
+            nv[slot] = n
+        toks_j = jnp.asarray(toks)
+        args = (self.params, self.cache, toks_j, jnp.asarray(pos0),
+                jnp.asarray(nv))
+        logits_all, self.cache = (self._verify(*args, pt) if self.paged
+                                  else self._verify(*args))
+        self.model_steps["verify_steps"] += 1
+        self.model_steps["decode_steps"] += len(decode_rows)
+        self.model_steps["max_step_prefill_tokens"] = max(
+            self.model_steps["max_step_prefill_tokens"],
+            int(sum(plan.values())))
+        temps = np.zeros(B, np.float32)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                temps[i] = r.temperature
+        self.rng, k = jax.random.split(self.rng)
+        n_emit, emit = sampler.verify_batch(
+            logits_all, toks_j, jnp.asarray(nv), jnp.asarray(ndraft), k,
+            jnp.asarray(temps))
+        n_emit = np.asarray(n_emit)
+        emit = np.asarray(emit)
+        # prefill rows: emit[:, 0] is the sample at their last valid lane
+        # (n_draft=0 rows verify nothing), exactly _sample_rows' output
+        for slot, n in plan.items():
+            self._postprocess_prefill(slot, n, emit[:, 0])
+        for slot in decode_rows:
+            self._postprocess_verify(slot, int(n_emit[slot]), emit[slot],
+                                     int(ndraft[slot]))
         return True

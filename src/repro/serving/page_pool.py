@@ -45,7 +45,8 @@ class PagePool:
         # LIFO free list, low page ids handed out first (pop from end)
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self.stats = {"allocs": 0, "frees": 0, "cow_copies": 0,
-                      "alloc_failures": 0, "peak_in_use": 0}
+                      "alloc_failures": 0, "peak_in_use": 0,
+                      "tail_truncates": 0}
 
     # ------------------------------------------------------------- queries
 
@@ -89,6 +90,29 @@ class PagePool:
             if self.refcount[p] == 0:
                 self._free.append(p)
                 self.stats["frees"] += 1
+
+    def truncate_tail(self, table_row, keep_pages: int) -> int:
+        """Roll back a page-table TAIL: drop this holder's reference on
+        every mapped page at logical index >= ``keep_pages`` and unmap it
+        (set -1) in ``table_row`` (a mutable [NP] int array).  Returns the
+        number of pages released.
+
+        This is the speculative-decode rollback primitive: a failed
+        verify leaves pages that were mapped for drafted-but-rejected
+        positions; truncating the tail restores the pool invariant that
+        every mapped page backs committed (or about-to-be-written)
+        tokens.  Pages shared with a snapshot (refcount > 1) merely lose
+        this table's reference — the pin keeps them alive.
+        """
+        released = 0
+        for lpage in range(keep_pages, len(table_row)):
+            pg = int(table_row[lpage])
+            if pg >= 0:
+                self.decref([pg])
+                table_row[lpage] = -1
+                released += 1
+        self.stats["tail_truncates"] += released
+        return released
 
     # ----------------------------------------------------------- integrity
 

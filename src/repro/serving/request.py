@@ -74,6 +74,19 @@ class Request:
     # re-bill them — TokenUsage stays what the user would be charged
     billed_prefill: int = 0
 
+    # ---- self-speculative decoding (docs/SERVING.md) ----------------
+    # Extra drafting corpus for the n-gram speculator, searched BEFORE
+    # prompt+output: the reflection controller feeds prior-round raw
+    # drafts here (they are quoted in the round's prompt text, but the
+    # raw token stream survives truncation / lossy detokenization).
+    # Never fed to the model — proposals from it are verified like any
+    # other draft, so a stale context can only cost masked lanes.
+    spec_context: Optional[List[int]] = None
+    spec_drafted: int = 0       # draft tokens submitted to verify steps
+    spec_accepted: int = 0      # of those, accepted (never billed unless
+    #                             accepted: output_tokens counts only
+    #                             committed tokens — the paper's cost axis)
+
     @property
     def total_len(self) -> int:
         return len(self.prompt) + len(self.output)

@@ -24,6 +24,70 @@ def sample(logits, key, temperature: float):
 
 
 @jax.jit
+def verify_batch(logits: jax.Array, tokens: jax.Array, nv: jax.Array,
+                 n_draft: jax.Array, key: jax.Array,
+                 temperature: jax.Array) -> tuple:
+    """Accept/reject drafted tokens against one verify step's logits.
+
+    logits: [B, W, V] per-lane next-token distributions from the model's
+    all-lane verify step; tokens: [B, W] the lanes that were fed in;
+    nv: [B] valid lanes per row; n_draft: [B] of those, how many trailing
+    lanes are speculator DRAFTS (0 = plain decode/prefill row);
+    temperature: [B] (<= 0 greedy).  Lane layout per row: lanes
+    [nv-1-n_draft .. nv-1] are the verification window — its first lane
+    is the last committed token, the rest are drafts.
+
+    Returns ``(n_emit [B], emit [B, W])``: row b commits exactly
+    ``emit[b, :n_emit[b]]`` — the longest accepted draft prefix plus one
+    token sampled from the model (the "bonus" token on full acceptance,
+    the corrected token on rejection).  Greedy rows accept a draft iff it
+    equals the argmax, which makes speculative output BIT-IDENTICAL to
+    non-speculative greedy decode; temperature rows use standard
+    speculative rejection sampling specialised to a point-mass drafter
+    (q(d)=1): accept d with prob p(d), resample from p with d's mass
+    zeroed on rejection — the emitted tokens are distributed exactly as
+    ancestral sampling from p.
+    """
+    B, W, _ = logits.shape
+    lane = jnp.arange(W)[None, :]                          # [1, W]
+    b0 = nv - 1 - n_draft                                  # [B]
+    vlane = jnp.clip(b0[:, None] + lane, 0, W - 1)         # [B, W]
+    lg = jnp.take_along_axis(logits, vlane[..., None],
+                             axis=1).astype(jnp.float32)   # [B, W, V]
+    greedy_g = jnp.argmax(lg, axis=-1).astype(jnp.int32)   # [B, W]
+    # draft token checked at verification position j sits one lane later
+    dtok = jnp.take_along_axis(tokens, jnp.clip(vlane + 1, 0, W - 1), axis=1)
+    in_window = lane < n_draft[:, None]                    # [B, W]
+
+    temp = jnp.maximum(temperature, 1e-6)[:, None, None]
+    probs = jax.nn.softmax(lg / temp, axis=-1)             # [B, W, V]
+    k_acc, k_res = jax.random.split(key)
+    u = jax.random.uniform(k_acc, (B, W))
+    p_draft = jnp.take_along_axis(probs, dtok[..., None], axis=-1)[..., 0]
+    acc = jnp.where(temperature[:, None] > 0.0, u < p_draft,
+                    dtok == greedy_g) & in_window
+    # longest accepted prefix: cumprod zeroes everything past the first miss
+    n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+    # residual distribution at the first unaccepted verification lane:
+    # p with the rejected draft's mass removed (full p when every draft
+    # was accepted — the bonus token)
+    p_end = jnp.take_along_axis(probs, n_acc[:, None, None],
+                                axis=1)[:, 0]              # [B, V]
+    d_end = jnp.take_along_axis(dtok, n_acc[:, None], axis=1)[:, 0]
+    rejected = n_acc < n_draft
+    zero_d = (jnp.arange(p_end.shape[-1])[None, :] == d_end[:, None])
+    p_end = jnp.where(rejected[:, None] & zero_d, 0.0, p_end)
+    keys = jax.random.split(k_res, B)
+    res_tok = jax.vmap(lambda k, p: jax.random.categorical(
+        k, jnp.log(jnp.maximum(p, 1e-30))))(keys, p_end).astype(jnp.int32)
+    emit_temp = jnp.where(lane < n_acc[:, None], dtok,
+                          jnp.where(lane == n_acc[:, None],
+                                    res_tok[:, None], 0))
+    emit = jnp.where(temperature[:, None] > 0.0, emit_temp, greedy_g)
+    return n_acc + 1, emit.astype(jnp.int32)
+
+
+@jax.jit
 def sample_batch(logits: jax.Array, key: jax.Array,
                  temperature: jax.Array) -> jax.Array:
     """Sample one token per row in a single call.

@@ -51,3 +51,55 @@ def quick_fit_ramp(model, params, *, steps: int = 120, batch: int = 8,
                            jnp.int32)
         params = step(params, toks)
     return params
+
+
+def reflect_sequence(rng, seq: int, vocab: int) -> list:
+    """One reflection-round-shaped training sequence:
+    ``[1] question answer [2] [1] question answer`` where the question is
+    a ramp and the answer continues it — the round-2 serving pattern
+    (prompt quotes the prior draft, restates the question, and the model
+    re-derives the same answer).  Trimmed to ``seq`` tokens, so the tail
+    usually ends mid-second-answer: exactly the decode frontier the
+    speculative benchmark measures."""
+    L1 = int(rng.integers(10, 22))
+    L2 = max(4, (seq - 2 * L1 - 3 + 1) // 2)
+    s = int(rng.integers(3, vocab - (L1 + L2) - 2))
+    q = [1] + list(range(s, s + L1))
+    a = list(range(s + L1, s + L1 + L2))
+    toks = q + a + [2] + q + a
+    return toks[:seq]
+
+
+def quick_fit_reflect(model, params, *, steps: int = 200, batch: int = 8,
+                      seq: int = 96, lr: float = 0.5, seed: int = 0):
+    """Params fitted on REFLECTION-ROUND sequences (see reflect_sequence).
+
+    A plain ramp fit (quick_fit_ramp) collapses when the context contains
+    the quoted prior answer — duplicated ramp segments are out of its
+    training distribution and greedy continuations go degenerate.  This
+    fixture trains the exact round-2 structure, so greedy round 2
+    confidently re-emits the round-1 answer: the high-overlap regime
+    speculative decoding exploits ("First Try Matters"), made
+    deterministic for benchmarks (benchmarks/speculative.py).
+    """
+    vocab = model.cfg.vocab_size
+    assert seq < vocab - 2, "reflection sequences must fit the vocab"
+
+    def loss_fn(p, toks):
+        logits, _ = model.forward(p, {"tokens": toks})
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        tgt = toks[:, 1:]
+        return -jnp.take_along_axis(lp, tgt[..., None], -1).mean()
+
+    @jax.jit
+    def step(p, toks):
+        _, g = jax.value_and_grad(loss_fn)(p, toks)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        toks = jnp.asarray(
+            np.stack([reflect_sequence(rng, seq, vocab)
+                      for _ in range(batch)]), jnp.int32)
+        params = step(params, toks)
+    return params

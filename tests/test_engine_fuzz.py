@@ -1,6 +1,7 @@
 """Hypothesis fuzzing of the serving engine: random request mixes must
 preserve the engine's core invariants (cache-identity, accounting
-conservation, completion)."""
+conservation, completion) — and speculation toggled on/off must be
+bit-identical at temperature 0 across attn/MoE/hybrid archs."""
 import jax
 import pytest
 pytest.importorskip("hypothesis")  # optional dep: skip, don't error
@@ -26,6 +27,45 @@ req_strategy = st.lists(
         st.sampled_from([BudgetTier.NONE, BudgetTier.LOW]),
     ),
     min_size=1, max_size=5)
+
+
+spec_strategy = st.tuples(
+    st.lists(st.integers(3, 250), min_size=3, max_size=10),  # repeated motif
+    st.integers(2, 4),                                       # repetitions
+    st.integers(3, 10),                                      # max_new
+)
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(args=spec_strategy)
+def test_engine_fuzz_spec_parity(model_setup, args):
+    """Speculation must be INVISIBLE in greedy outputs and billing: any
+    repetitive prompt (the drafter's active regime) decodes bit-identical
+    with spec_decode on vs off, and usage counts only committed tokens."""
+    model, params = model_setup
+    motif, reps, mn = args
+    prompt = [1] + motif * reps          # self-repetition: drafts fire
+    outs = {}
+    for spec in (False, True):
+        eng = Engine(model, params,
+                     ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                                 spec_decode=spec, spec_tokens=4))
+        rr = [Request(prompt=list(prompt), max_new_tokens=mn, eos_id=None),
+              Request(prompt=list(prompt) + [2], max_new_tokens=mn,
+                      eos_id=None)]
+        for r in rr:
+            eng.submit(r)
+        eng.run()
+        for r in rr:
+            assert r.status == Status.DONE
+            assert r.usage.output_tokens == len(r.output) == mn
+            assert (r.usage.input_tokens + r.usage.cache_read_tokens
+                    == len(prompt) + (1 if r is rr[1] else 0))
+        if eng.paged:
+            eng.pool.check()
+        outs[spec] = [r.output for r in rr]
+    assert outs[True] == outs[False], "speculation changed greedy outputs"
 
 
 @settings(max_examples=10, deadline=None,

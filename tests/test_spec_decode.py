@@ -1,0 +1,441 @@
+"""Self-speculative decoding: drafting, batched verify, rollback,
+billing, and prefix-cache interaction (docs/SERVING.md#speculative).
+
+The core contract under test: with ``ServeConfig.spec_decode`` on,
+greedy outputs are BIT-IDENTICAL to non-speculative decode (attn, MoE,
+hybrid — where speculation auto-gates off — and paged + int8 KV), only
+committed tokens are billed, page-pool invariants survive rollbacks,
+and prefix-cache snapshots taken around verify steps never serve
+rolled-back content.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ServeConfig
+from repro.models.registry import build_model, get_smoke_config
+from repro.serving import sampler
+from repro.serving.engine import Engine
+from repro.serving.page_pool import PagePool
+from repro.serving.request import Request, Status
+from repro.serving.speculator import NGramSpeculator, draft_corpus
+
+
+def _setup(arch="qwen3_0_6b"):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+REP_PROMPT = [1] + list(range(10, 22)) * 3     # self-repetition: drafts fire
+
+
+# ---------------------------------------------------------------- speculator
+
+def test_speculator_most_recent_match():
+    sp = NGramSpeculator(3, 1)
+    #                 0  1  2  3  4  5  6  7   8
+    corpus = [5, 6, 7, 9, 5, 6, 7, 8, 5, 6, 7]
+    # suffix trigram [5,6,7] occurs at 0 and 4; most recent match (4) wins
+    assert sp.propose(corpus, 3) == [8, 5, 6]
+    assert sp.propose(corpus, 1) == [8]
+
+
+def test_speculator_falls_back_to_shorter_ngrams():
+    sp = NGramSpeculator(3, 1)
+    corpus = [1, 2, 3, 9, 9, 4, 3]   # no trigram/bigram recurrence; 3 does
+    assert sp.propose(corpus, 2) == [9, 9]
+
+
+def test_speculator_no_match():
+    sp = NGramSpeculator(3, 1)
+    assert sp.propose([1, 2, 3, 4, 5], 4) == []
+    assert sp.propose([1], 4) == []
+    assert sp.propose([1, 2, 2], 0) == []
+
+
+def test_draft_corpus_order():
+    assert draft_corpus([1, 2], [3], [9, 8]) == [9, 8, 1, 2, 3]
+    assert draft_corpus([1, 2], [3], None) == [1, 2, 3]
+
+
+# ------------------------------------------------------------- verify_batch
+
+def test_verify_batch_greedy_acceptance():
+    """Handcrafted logits: accepted prefix length and emitted tokens must
+    follow the greedy chain exactly."""
+    B, W, V = 2, 4, 16
+    logits = np.full((B, W, V), -10.0, np.float32)
+    # row 0: model greedily continues 5, 6, 7, 8; drafts [5, 6, 9] ->
+    # accept 2, emit [5, 6, 7]
+    for j, g in enumerate([5, 6, 7, 8]):
+        logits[0, j, g] = 10.0
+    # row 1: draft [3] rejected immediately (model says 4) -> emit [4]
+    for j, g in enumerate([4, 4, 4, 4]):
+        logits[1, j, g] = 10.0
+    tokens = np.zeros((B, W), np.int32)
+    tokens[0] = [99, 5, 6, 9]
+    tokens[1] = [99, 3, 0, 0]
+    n_emit, emit = sampler.verify_batch(
+        jnp.asarray(logits), jnp.asarray(tokens),
+        jnp.asarray([4, 2], jnp.int32), jnp.asarray([3, 1], jnp.int32),
+        jax.random.PRNGKey(0), jnp.zeros(B, jnp.float32))
+    n_emit, emit = np.asarray(n_emit), np.asarray(emit)
+    assert n_emit[0] == 3 and emit[0, :3].tolist() == [5, 6, 7]
+    assert n_emit[1] == 1 and emit[1, 0] == 4
+
+
+def test_verify_batch_prefill_row_samples_last_lane():
+    """n_draft=0 rows (prefill chunks riding the verify step) must sample
+    from their LAST valid lane, like the mixed step does."""
+    B, W, V = 1, 4, 8
+    logits = np.full((B, W, V), -10.0, np.float32)
+    logits[0, 2, 6] = 10.0                      # lane nv-1 = 2 -> token 6
+    n_emit, emit = sampler.verify_batch(
+        jnp.asarray(logits), jnp.zeros((B, W), jnp.int32),
+        jnp.asarray([3], jnp.int32), jnp.asarray([0], jnp.int32),
+        jax.random.PRNGKey(0), jnp.zeros(B, jnp.float32))
+    assert int(np.asarray(n_emit)[0]) == 1
+    assert int(np.asarray(emit)[0, 0]) == 6
+
+
+def test_verify_batch_temperature_rejection_excludes_draft():
+    """On rejection at temperature > 0, the resampled token must come
+    from the residual distribution — never the rejected draft token."""
+    B, W, V = 1, 3, 8
+    logits = np.zeros((B, W, V), np.float32)
+    logits[0, 0, 3] = 2.0                       # p(3) largest but not 1
+    tokens = np.asarray([[7, 5, 0]], np.int32)  # draft 5
+    hits = []
+    for seed in range(32):
+        n_emit, emit = sampler.verify_batch(
+            jnp.asarray(logits), jnp.asarray(tokens),
+            jnp.asarray([2], jnp.int32), jnp.asarray([1], jnp.int32),
+            jax.random.PRNGKey(seed), jnp.full(1, 1.0, jnp.float32))
+        n_emit, emit = np.asarray(n_emit), np.asarray(emit)
+        if n_emit[0] == 1:                      # draft rejected
+            hits.append(int(emit[0, 0]))
+    assert hits, "rejection never sampled in 32 seeds"
+    assert 5 not in hits, "rejected draft token was re-emitted"
+
+
+# ------------------------------------------------- engine parity + billing
+
+@pytest.mark.parametrize("arch,kv_dtype", [
+    ("qwen3_0_6b", "model"),            # dense attention
+    ("granite_moe_1b_a400m", "model"),  # MoE (capacity dispatch in verify)
+    ("recurrentgemma_9b", "model"),     # hybrid: spec auto-gated off
+    ("qwen3_0_6b", "int8"),             # quantized paged KV
+])
+def test_spec_parity_across_archs(arch, kv_dtype):
+    """spec_decode on/off is bit-identical per arch family (paged + int8
+    included).  Hybrid (recurrent-state) archs cannot roll back a
+    rejected draft, so the engine must auto-disable speculation there —
+    parity then pins that the gate works end-to-end."""
+    m, params = _setup(arch)
+    outs = {}
+    for spec in (False, True):
+        eng = Engine(m, params,
+                     ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                                 spec_decode=spec, spec_tokens=4,
+                                 kv_dtype=kv_dtype))
+        if spec and arch == "recurrentgemma_9b":
+            assert not eng.spec, "recurrent-state arch must gate spec off"
+        r = Request(prompt=list(REP_PROMPT), max_new_tokens=8, eos_id=None)
+        eng.submit(r)
+        eng.run()
+        assert r.status == Status.DONE
+        assert r.usage.output_tokens == len(r.output)
+        if eng.paged:
+            eng.pool.check()
+        outs[spec] = list(r.output)
+    assert outs[True] == outs[False], f"spec changed outputs for {arch}"
+
+
+def test_spec_parity_ring_mode():
+    """Non-paged (ring) engines speculate too when no ring is
+    capacity-clamped; outputs must match the non-spec ring engine."""
+    m, params = _setup()
+    outs = {}
+    for spec in (False, True):
+        eng = Engine(m, params,
+                     ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                                 paged_kv=False, spec_decode=spec))
+        assert eng.spec == spec
+        r = Request(prompt=list(REP_PROMPT), max_new_tokens=8, eos_id=None)
+        eng.submit(r)
+        eng.run()
+        outs[spec] = list(r.output)
+    assert outs[True] == outs[False]
+
+
+def test_spec_gate_windowed_ring():
+    """A window-clamped ring cache must refuse to speculate: a rejected
+    lane's ring write evicts a live in-window token (models/attention.py
+    _masked_ring_write).  The paged engine has no aliasing and keeps
+    speculation on for the same windowed config — and must stay
+    bit-identical end-to-end while the window slides (verify writes,
+    rollback truncation and _free_out_of_window all interact)."""
+    cfg = get_smoke_config("qwen3_0_6b").replace(dtype="float32",
+                                                 sliding_window=32)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    ring = Engine(m, params, ServeConfig(max_batch=1, max_seq=128,
+                                         page_size=8, paged_kv=False,
+                                         spec_decode=True))
+    assert not ring.spec
+    outs = {}
+    for spec in (False, True):
+        paged = Engine(m, params, ServeConfig(max_batch=1, max_seq=128,
+                                              page_size=8,
+                                              spec_decode=spec))
+        if spec:
+            assert paged.spec
+        # decode well past the 32-token window so slid-out pages free
+        # while verify steps write and roll back at the frontier
+        r = Request(prompt=list(REP_PROMPT), max_new_tokens=16,
+                    eos_id=None)
+        paged.submit(r)
+        paged.run()
+        assert r.usage.output_tokens == len(r.output) == 16
+        if spec:
+            assert paged.model_steps["spec_drafted"] > 0
+        paged.pool.check()
+        outs[spec] = list(r.output)
+    assert outs[True] == outs[False], "windowed paged spec diverged"
+
+
+def _reference_output(m, params, prompt, max_new, **scfg_kw):
+    eng = Engine(m, params, ServeConfig(max_batch=1, max_seq=128,
+                                        page_size=8, prefix_cache=False,
+                                        **scfg_kw))
+    r = Request(prompt=list(prompt), max_new_tokens=max_new, eos_id=None)
+    eng.submit(r)
+    eng.run()
+    return list(r.output)
+
+
+def _hostile_context(prompt, ref_output):
+    """A spec_context that makes the drafter propose a WRONG token at
+    every decode position: for each step j, plant the true suffix
+    trigram followed by a token the model will not emit.  The most-
+    recent-match rule picks these segments (nothing later matches), so
+    every verify step sees at least one rejection."""
+    seq = list(prompt) + list(ref_output)
+    base = len(prompt)
+    segs = []
+    for j in range(len(ref_output)):
+        segs += seq[base + j - 3: base + j] + [450 + (j % 7)]
+    return segs
+
+
+def test_rejected_drafts_never_billed():
+    """Billing is accepted-token billing: a hostile spec_context that
+    makes drafts WRONG must not change TokenUsage at all — drafted
+    lanes are model work, not user output (the paper's cost axis)."""
+    m, params = _setup()
+    prompt = list(REP_PROMPT)
+    ref = _reference_output(m, params, prompt, 8)
+    hostile = _hostile_context(prompt, ref)
+    usages = {}
+    for spec, ctx in ((False, None), (True, hostile)):
+        eng = Engine(m, params,
+                     ServeConfig(max_batch=1, max_seq=128, page_size=8,
+                                 spec_decode=spec, spec_tokens=4))
+        r = Request(prompt=list(prompt), max_new_tokens=8, eos_id=None,
+                    spec_context=ctx)
+        eng.submit(r)
+        eng.run()
+        assert r.usage.output_tokens == len(r.output) == 8
+        assert (r.usage.input_tokens + r.usage.cache_read_tokens
+                == len(prompt))
+        usages[spec] = (list(r.output), r.usage.input_tokens,
+                        r.usage.cache_read_tokens, r.usage.output_tokens)
+        if spec:
+            assert r.spec_drafted > r.spec_accepted, \
+                "hostile context never caused a rejection"
+            assert eng.model_steps["verify_steps"] > 0
+            eng.pool.check()
+    assert usages[True] == usages[False], \
+        "rejected drafts leaked into billing or outputs"
+
+
+def test_spec_preemption_replay_billing():
+    """Preemption mid-speculation must replay and bill exactly once:
+    the billed_prefill watermark covers only COMMITTED tokens, so a
+    rollback before preemption cannot inflate (or deflate) usage."""
+    m, params = _setup()
+    prompt = list(REP_PROMPT)
+    results = {}
+    for tag, num_pages in (("tight", 10), ("roomy", 0)):
+        eng = Engine(m, params,
+                     ServeConfig(max_batch=2, max_seq=64, page_size=8,
+                                 num_pages=num_pages, spec_decode=True,
+                                 spec_tokens=4, prefix_cache=False))
+        rr = [Request(prompt=list(prompt), max_new_tokens=10, eos_id=None),
+              Request(prompt=list(prompt) + [2], max_new_tokens=10,
+                      eos_id=None)]
+        for r in rr:
+            eng.submit(r)
+        eng.run()
+        for r in rr:
+            assert r.status == Status.DONE
+            assert r.usage.output_tokens == len(r.output) == 10
+            assert (r.usage.input_tokens + r.usage.cache_read_tokens
+                    == len(r.prompt))
+        eng.pool.check()
+        results[tag] = ([r.output for r in rr], rr[0].preemptions
+                        + rr[1].preemptions)
+    assert results["tight"][1] > 0, "tight pool never preempted"
+    assert results["tight"][0] == results["roomy"][0], \
+        "preemption during speculation changed outputs"
+
+
+def test_pool_clean_after_spec_run():
+    """After a speculative run completes, every page the rollbacks and
+    truncations touched must be accounted for: only prefix-cache pins
+    may remain resident."""
+    m, params = _setup()
+    eng = Engine(m, params,
+                 ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                             spec_decode=True, prefix_cache=False))
+    r = Request(prompt=list(REP_PROMPT), max_new_tokens=12, eos_id=None)
+    eng.submit(r)
+    eng.run()
+    assert eng.model_steps["spec_drafted"] > 0
+    eng.pool.check()
+    assert eng.pool.used_pages == 0, "leaked pages after spec run"
+
+
+# ------------------------------------------- rollback vs prefix cache
+
+def test_snapshot_after_rollback_serves_correct_prefix():
+    """Regression (ISSUE 4 satellite): snapshots published around verify
+    steps must never pin rolled-back content as reusable prefix.  A
+    speculating request (with rejections forced via a hostile
+    spec_context) publishes its finish snapshot; a second request that
+    extends that conversation adopts the pinned pages — its output must
+    be bit-identical to a cold engine that never speculated or cached."""
+    m, params = _setup()
+    prompt = list(REP_PROMPT)
+    ref = _reference_output(m, params, prompt, 8)
+    hostile = _hostile_context(prompt, ref)
+
+    eng = Engine(m, params,
+                 ServeConfig(max_batch=2, max_seq=160, page_size=8,
+                             spec_decode=True, spec_tokens=4))
+    r1 = Request(prompt=list(prompt), max_new_tokens=8, eos_id=None,
+                 spec_context=hostile)
+    eng.submit(r1)
+    eng.run()
+    assert r1.spec_drafted > r1.spec_accepted, "no rejection exercised"
+
+    # round 2 extends the finished conversation -> adopts pinned pages
+    convo = prompt + list(r1.output) + [2] + list(range(10, 22))
+    r2 = Request(prompt=list(convo), max_new_tokens=8, eos_id=None)
+    eng.submit(r2)
+    eng.run()
+    assert r2.usage.cache_read_tokens > 0, "snapshot was not adopted"
+
+    cold = Engine(m, params,
+                  ServeConfig(max_batch=2, max_seq=160, page_size=8,
+                              prefix_cache=False))
+    ref = Request(prompt=list(convo), max_new_tokens=8, eos_id=None)
+    cold.submit(ref)
+    cold.run()
+    assert r2.output == ref.output, \
+        "snapshot published around a rollback served a wrong prefix"
+
+
+def test_truncate_tail_pool_invariants():
+    pool = PagePool(8, 4)
+    row = np.full(6, -1, np.int64)
+    for i in range(4):
+        row[i] = pool.alloc()
+    pool.incref([int(row[1])])                   # simulated snapshot pin
+    released = pool.truncate_tail(row, 2)
+    assert released == 2
+    assert row[:2].tolist() != [-1, -1] and row[2:].tolist() == [-1] * 4
+    assert pool.refcount[1] == 2                 # pin untouched
+    pool.check()
+    assert pool.free_pages == 6                  # only pages 0,1 still held
+
+
+def test_eos_inside_accepted_draft_stops_exactly():
+    """eos arriving as an ACCEPTED draft must finish the request at the
+    same token as non-speculative decode (no overshoot, no extra bill)."""
+    m, params = _setup()
+    ref_eng = Engine(m, params, ServeConfig(max_batch=1, max_seq=128,
+                                            page_size=8))
+    ref = Request(prompt=list(REP_PROMPT), max_new_tokens=12, eos_id=None)
+    ref_eng.submit(ref)
+    ref_eng.run()
+    assert len(ref.output) >= 4
+    eos = ref.output[3]                          # appears mid-stream
+    outs = {}
+    for spec in (False, True):
+        eng = Engine(m, params,
+                     ServeConfig(max_batch=1, max_seq=128, page_size=8,
+                                 spec_decode=spec, spec_tokens=4))
+        r = Request(prompt=list(REP_PROMPT), max_new_tokens=12, eos_id=eos)
+        eng.submit(r)
+        eng.run()
+        assert r.stop_reason == "eos"
+        assert r.usage.output_tokens == len(r.output)
+        outs[spec] = list(r.output)
+    assert outs[True] == outs[False]
+
+
+def test_drafts_never_starve_prefill():
+    """Liveness: with the token budget smaller than the batch's combined
+    draft appetite, a newly arriving request must still prefill — drafts
+    are trimmed so >= 1 budget token always reaches the planner."""
+    m, params = _setup()
+    eng = Engine(m, params,
+                 ServeConfig(max_batch=3, max_seq=128, page_size=8,
+                             spec_decode=True, spec_tokens=4,
+                             prefill_token_budget=4, prefix_cache=False))
+    early = [Request(prompt=list(REP_PROMPT), max_new_tokens=40,
+                     eos_id=None) for _ in range(2)]
+    for r in early:
+        eng.submit(r)
+    while not all(r.status is Status.DECODING for r in early):
+        eng.step()
+    late = Request(prompt=list(range(3, 40)), max_new_tokens=4, eos_id=None)
+    eng.submit(late)
+    # 2 rows x 4 drafted lanes > budget 4: untrimmed drafts would leave
+    # the planner 0 tokens every step for the whole 40-token decode
+    for _ in range(len(late.prompt) + 2):
+        eng.step()
+        if late.status is Status.DECODING or late.status is Status.DONE:
+            break
+        assert any(r.status is not Status.DONE for r in early), \
+            "decode finished before prefill ever progressed"
+    assert late.prefill_pos > 0, "speculation starved the prefilling row"
+    eng.run()
+    assert late.status is Status.DONE
+    assert eng.model_steps["spec_drafted"] > 0
+    eng.pool.check()
+
+
+def test_spec_temperature_sampling_invariants():
+    """Temperature > 0 speculation: rejection sampling keeps the engine
+    invariants (length caps, billing conservation, pool health)."""
+    m, params = _setup()
+    eng = Engine(m, params,
+                 ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                             spec_decode=True, spec_tokens=4))
+    rr = [Request(prompt=list(REP_PROMPT), max_new_tokens=10, eos_id=None,
+                  temperature=0.8),
+          Request(prompt=list(REP_PROMPT) + [2], max_new_tokens=10,
+                  eos_id=None, temperature=0.8)]
+    for r in rr:
+        eng.submit(r)
+    eng.run()
+    for r in rr:
+        assert r.status == Status.DONE
+        assert len(r.output) == 10
+        assert r.usage.output_tokens == 10
+        assert all(0 <= t < m.cfg.vocab_size for t in r.output)
+    eng.pool.check()
