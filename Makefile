@@ -1,10 +1,16 @@
-.PHONY: verify test bench clean
+.PHONY: verify test test-fast bench clean
 
 verify:
 	scripts/verify.sh
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
+
+# Inner-loop subset: deselects `slow` (jit-heavy engine/e2e) and `fuzz`
+# (hypothesis property) tests — seconds instead of minutes.  Tier-1 CI
+# (`make test` / scripts/verify.sh) always runs the FULL suite.
+test-fast:
+	PYTHONPATH=src python -m pytest -x -q -m "not slow and not fuzz"
 
 bench:
 	PYTHONPATH=src python benchmarks/run.py

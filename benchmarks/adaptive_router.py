@@ -1,0 +1,158 @@
+"""Adaptive sweet-spot router benchmark: online per-request routing vs
+fixed reflection strategies on a mixed math+translation workload.
+
+Replays a stream of simulated requests (nova_micro; alternating math500
+and flores examples, each with its own sampled SLO ceilings) through
+
+  * fixed reflect0 / reflect1 / reflect3 (the paper's offline grid
+    points — they cannot see SLOs or per-request signals), and
+  * the online router (core/controller.py): per-round stop / reflect /
+    escalate from answer-stability + judge-verdict + vote signals, hard
+    SLO enforcement, and a per-domain online Pareto frontier that
+    warm-starts later requests (it learns that reflection pays on math
+    and not on translation — the paper's central domain-dependence
+    result, applied at serve time),
+
+and reports accuracy, mean cost, and p99 latency per policy.  The gate
+(also enforced by scripts/verify.sh via --smoke) asserts the router
+matches-or-beats fixed reflect3 accuracy at <= 0.7x its cost, and that
+every routed request respected its SLO ceilings.
+
+Usage: PYTHONPATH=src python benchmarks/adaptive_router.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import quality_sim as QS
+from repro.core.accounting import CostModel, LatencyModel
+from repro.core.budget import InferenceStrategy
+from repro.core.controller import SLO, SweetSpotController
+from repro.core.feedback import LLMJudgeFeedback
+from repro.core.reflection import ReflectionController, SimulatedBackend
+
+MODEL = "nova_micro"              # the paper's +220% headline model
+DOMAINS = ("math500", "flores")   # reflection helps / reflection hurts
+
+
+def _make_slos(domain: str, n: int, cm: CostModel, lm: LatencyModel,
+               rng: np.random.Generator) -> List[SLO]:
+    """Per-request ceilings: uniform 2.5-10x multiples of the domain's
+    round-0 cost / latency — comfortably above the 1x floor that keeps
+    round 0 itself fundable; ~30% of requests arrive unconstrained."""
+    prof = QS.TOKEN_PROFILE[domain]
+    from repro.serving.request import TokenUsage
+    round0 = TokenUsage(input_tokens=prof["prompt"],
+                        cache_write_tokens=prof["prompt"],
+                        output_tokens=prof["out"])
+    c0, l0 = cm.cost(round0), lm.latency(round0)
+    out = []
+    for _ in range(n):
+        if rng.random() < 0.3:
+            out.append(SLO())
+        else:
+            out.append(SLO(max_cost_usd=c0 * rng.uniform(2.5, 10.0),
+                           max_latency_s=l0 * rng.uniform(2.5, 10.0)))
+    return out
+
+
+def _fixed_policy(rounds: int, workload, cm, lm) -> Dict:
+    """One fixed-strategy replay (fresh sims: same cache state as the
+    router's replay)."""
+    ctrl = ReflectionController(InferenceStrategy(rounds))
+    sims = {d: SimulatedBackend(MODEL, d, seed=3) for d in DOMAINS}
+    accs, costs, lats = [], [], []
+    for domain, row, _slo in workload:
+        res = ctrl.run_simulated(sims[domain], row[:rounds + 1])
+        accs.append(bool(res.final.correct))
+        costs.append(cm.cost(res.usage))
+        lats.append(lm.latency(res.usage))
+    return {"acc": float(np.mean(accs)) * 100.0,
+            "cost": float(np.mean(costs)),
+            "p99": float(np.percentile(lats, 99))}
+
+
+def run(verbose: bool = True, smoke: bool = False):
+    n_per_domain = 150 if smoke else 400
+    cm, lm = CostModel.for_model(MODEL), LatencyModel.for_model(MODEL)
+
+    # interleaved workload: (domain, trajectory row, slo) per request
+    slo_rng = np.random.default_rng(5)
+    traj = {d: QS.simulate_trajectories(d, MODEL, n_per_domain, 3, seed=7)
+            for d in DOMAINS}
+    slos = {d: _make_slos(d, n_per_domain, cm, lm, slo_rng)
+            for d in DOMAINS}
+    workload = []
+    for i in range(n_per_domain):
+        for d in DOMAINS:
+            workload.append((d, traj[d].correct[i], slos[d][i]))
+
+    fixed = {r: _fixed_policy(r, workload, cm, lm) for r in (0, 1, 3)}
+
+    router = SweetSpotController(cm, lm)
+    ctrl = ReflectionController(InferenceStrategy(3, feedback="judge"),
+                                feedback=LLMJudgeFeedback(seed=0),
+                                router=router)
+    sims = {d: SimulatedBackend(MODEL, d, seed=3) for d in DOMAINS}
+    rng = np.random.default_rng(11)
+    accs, costs, lats, rounds, viol = [], [], [], [], 0
+    per_domain = {d: [[], []] for d in DOMAINS}       # accs, rounds
+    for domain, row, slo in workload:
+        res = ctrl.route_simulated(sims[domain], row, slo, rng)
+        cost = cm.cost(res.usage)
+        lat = lm.latency(res.usage)
+        accs.append(bool(res.final.correct))
+        costs.append(cost)
+        lats.append(lat)
+        rounds.append(res.rounds_run)
+        per_domain[domain][0].append(bool(res.final.correct))
+        per_domain[domain][1].append(res.rounds_run)
+        # acceptance criterion: every per-request trace respects its SLO
+        if not slo.admits(cost, lat):
+            viol += 1
+    r_acc = float(np.mean(accs)) * 100.0
+    r_cost = float(np.mean(costs))
+    r_p99 = float(np.percentile(lats, 99))
+    ratio = r_cost / fixed[3]["cost"]
+
+    if verbose:
+        print(f"mixed {'+'.join(DOMAINS)} workload, {len(workload)} "
+              f"requests, model={MODEL}:")
+        print(f"  {'policy':10s}{'acc%':>7s}{'$/req':>11s}{'p99 lat':>9s}")
+        for r in (0, 1, 3):
+            f = fixed[r]
+            print(f"  reflect{r:<3d}{f['acc']:7.1f}{f['cost']:11.6f}"
+                  f"{f['p99']:8.1f}s")
+        print(f"  {'router':10s}{r_acc:7.1f}{r_cost:11.6f}{r_p99:8.1f}s"
+              f"   ({ratio:.2f}x reflect3 cost, "
+              f"mean {np.mean(rounds):.2f} rounds)")
+        for d in DOMAINS:
+            a, rr = per_domain[d]
+            print(f"    {d}: acc={np.mean(a)*100:.1f} "
+                  f"mean_rounds={np.mean(rr):.2f} "
+                  f"frontier={[p.strategy for p in router.frontiers[d].points]}")
+        print(f"  SLO violations: {viol}/{len(workload)}")
+
+    assert viol == 0, f"{viol} routed requests exceeded their SLO ceilings"
+    assert r_acc >= fixed[3]["acc"], \
+        f"router accuracy {r_acc:.1f} < fixed reflect3 {fixed[3]['acc']:.1f}"
+    assert ratio <= 0.7, \
+        f"router cost {ratio:.2f}x of reflect3 exceeds the 0.7x gate"
+    return [
+        ("adaptive_router_acc", 0.0, f"{r_acc:.1f}"),
+        ("adaptive_router_cost_vs_reflect3", 0.0, f"{ratio:.2f}x"),
+        ("adaptive_router_p99_s", 0.0, f"{r_p99:.1f}"),
+        ("adaptive_router_reflect3_acc", 0.0, f"{fixed[3]['acc']:.1f}"),
+        ("adaptive_router_slo_violations", 0.0, "0"),
+    ]
+
+
+if __name__ == "__main__":
+    t0 = time.time()
+    for row in run(smoke="--smoke" in sys.argv):
+        print(",".join(map(str, row)))
+    print(f"adaptive_router: OK ({time.time()-t0:.1f}s)")

@@ -38,6 +38,7 @@ MODULES = [
     "benchmarks.paged_kv",
     "benchmarks.kernels_micro",
     "benchmarks.speculative",
+    "benchmarks.adaptive_router",
 ]
 
 OUT_DIR = os.path.dirname(os.path.abspath(__file__))

@@ -1,11 +1,18 @@
 """Sweet-spot finder: the paper's practitioner guidance as a CLI.
 
+Offline (default): evaluate the full (model x strategy) grid through the
+calibrated simulator + accounting stack, print the Pareto frontier, and
+select the best configuration under your ceilings:
+
     PYTHONPATH=src python examples/sweet_spot.py --domain math500 \
         --max-latency 15 --max-cost 0.01
 
-Evaluates the full (model x strategy) grid through the calibrated
-simulator + accounting stack, prints the Pareto frontier, and selects the
-best configuration under your ceilings.
+Online (--online): the same ceilings, decided PER REQUEST AT SERVE TIME
+by the sweet-spot controller (core/controller.py) — replay a stream of
+simulated requests, watch the per-round stop/reflect/escalate decisions,
+and print the per-domain Pareto frontier the router learned online:
+
+    PYTHONPATH=src python examples/sweet_spot.py --domain flores --online
 """
 import argparse
 import os
@@ -17,14 +24,7 @@ from benchmarks.paper_grid import eval_domain
 from repro.core.pareto import pareto_frontier, sweet_spot
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--domain", default="math500",
-                    choices=["math500", "spider", "imdb", "flores"])
-    ap.add_argument("--max-latency", type=float, default=None)
-    ap.add_argument("--max-cost", type=float, default=None)
-    args = ap.parse_args()
-
+def offline(args):
     points, _ = eval_domain(args.domain)
     front = pareto_frontier(points)
     print(f"== {args.domain}: accuracy-latency Pareto frontier ==")
@@ -41,6 +41,74 @@ def main():
         print(f"\nsweet spot under latency<={lat}, cost<={c}:")
         print(f"  -> {best.name}: acc={best.accuracy:.1f} "
               f"lat={best.latency_s:.1f}s cost=${best.cost_usd:.4f}")
+
+
+def online(args):
+    import numpy as np
+
+    from repro.core import quality_sim as QS
+    from repro.core.accounting import CostModel, LatencyModel
+    from repro.core.budget import InferenceStrategy
+    from repro.core.controller import SLO, SweetSpotController
+    from repro.core.feedback import LLMJudgeFeedback
+    from repro.core.reflection import ReflectionController, SimulatedBackend
+
+    model = args.model
+    cm, lm = CostModel.for_model(model), LatencyModel.for_model(model)
+    router = SweetSpotController(cm, lm)
+    ctrl = ReflectionController(InferenceStrategy(3, feedback="judge"),
+                                feedback=LLMJudgeFeedback(seed=0),
+                                router=router)
+    n = args.n
+    traj = QS.simulate_trajectories(args.domain, model, n, 3, seed=7)
+    sim = SimulatedBackend(model, args.domain, seed=3)
+    rng = np.random.default_rng(11)
+    slo = SLO(max_cost_usd=args.max_cost, max_latency_s=args.max_latency)
+    accs, costs, rounds = [], [], []
+    print(f"== {args.domain}/{model}: routing {n} requests online "
+          f"(cost<={args.max_cost or '-'}, deadline<="
+          f"{args.max_latency or '-'}) ==")
+    for i in range(n):
+        res = ctrl.route_simulated(sim, traj.correct[i], slo, rng)
+        accs.append(bool(res.final.correct))
+        costs.append(cm.cost(res.usage))
+        rounds.append(res.rounds_run)
+        if i < args.show or i == n - 1:
+            path = " -> ".join(f"{d.action}[{d.reason}]" for d in res.trace)
+            print(f"  req {i:3d}: rounds={res.rounds_run} "
+                  f"${cm.cost(res.usage):.6f} {path}")
+    print(f"\nrouted: acc={np.mean(accs)*100:.1f}% "
+          f"mean_cost=${np.mean(costs):.6f} "
+          f"mean_rounds={np.mean(rounds):.2f}")
+    print("learned online frontier:")
+    frontier = router.frontiers.get(args.domain)   # absent if every
+    for p in (frontier.points if frontier else []):  # request was refused
+        print(f"  {p.strategy:16s} acc={p.accuracy:5.1f} "
+              f"cost=${p.cost_usd:.6f} lat={p.latency_s:5.1f}s "
+              f"(n={p.meta.get('n')})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--domain", default="math500",
+                    choices=["math500", "spider", "imdb", "flores"])
+    ap.add_argument("--max-latency", type=float, default=None)
+    ap.add_argument("--max-cost", type=float, default=None)
+    ap.add_argument("--online", action="store_true",
+                    help="route a simulated request stream through the "
+                         "online sweet-spot controller instead of the "
+                         "offline grid sweep")
+    ap.add_argument("--model", default="nova_micro",
+                    help="(--online) accounting/quality model key")
+    ap.add_argument("--n", type=int, default=200,
+                    help="(--online) number of requests to replay")
+    ap.add_argument("--show", type=int, default=8,
+                    help="(--online) per-request decision paths to print")
+    args = ap.parse_args()
+    if args.online:
+        online(args)
+    else:
+        offline(args)
 
 
 if __name__ == "__main__":

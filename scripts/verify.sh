@@ -26,4 +26,11 @@ python benchmarks/paged_kv.py --smoke
 echo "== smoke: benchmarks/speculative.py --smoke (spec decode) =="
 python benchmarks/speculative.py --smoke
 
+# Online sweet-spot router smoke: the adaptive controller on a mixed
+# math+translation workload must match-or-beat fixed reflect3 accuracy
+# at <= 0.7x its cost, with zero SLO-ceiling violations (asserted inside
+# the module; deterministic workload, no wall-clock sensitivity).
+echo "== smoke: benchmarks/adaptive_router.py --smoke (online routing) =="
+python benchmarks/adaptive_router.py --smoke
+
 echo "verify: OK"

@@ -191,6 +191,18 @@ class ServeConfig:
     temperature: float = 0.0
     seed: int = 0
 
+    # ---- SLO-aware admission (docs/SERVING.md#slo-routing) ---------------
+    # Pricing model (core/accounting.py PAPER_PRICES/PAPER_LATENCY key)
+    # used to convert a queued request's predicted tokens into dollars /
+    # seconds and check them against the request's own ceilings
+    # (Request.max_cost_usd / max_latency_s): a fresh request whose
+    # remaining ceiling cannot fund its predicted tokens is FINALIZED
+    # (stop_reason "slo", empty output) instead of occupying a slot —
+    # its pages and step budget go to requests that can still finish
+    # inside their SLOs.  None disables the check entirely
+    # (bit-identical to pre-SLO behavior).
+    slo_price_model: Optional[str] = None
+
     # ---- chunked-prefill scheduler (docs/SERVING.md) ----------------------
     # Lane width of the mixed prefill+decode step: every scheduler tick
     # processes a [max_batch, prefill_chunk] token block; a decoding row

@@ -9,6 +9,13 @@ Drives multi-round reflect-and-revise conversations through a backend:
     (core/quality_sim.py) driving the SAME controller + accounting path,
     used to reproduce the paper's tables offline.
 
+With a ``router`` (core/controller.py::SweetSpotController) attached,
+the fixed ``reflection_rounds`` loop is replaced by per-round
+stop/reflect/escalate decisions against per-request SLO ceilings — the
+SAME ``decide`` policy for both backends, so paper-table reproduction
+and live serving share one decision path.  Without a router the original
+fixed loop runs unchanged (bit-parity pinned by tests).
+
 The reflection prompt template mirrors Appendix A.2 verbatim.
 """
 from __future__ import annotations
@@ -22,6 +29,10 @@ import numpy as np
 from repro.core import quality_sim as QS
 from repro.core.accounting import CostModel, LatencyModel
 from repro.core.budget import InferenceStrategy
+from repro.core.controller import (Decision, RoundSignals, SLO,
+                                   SweetSpotController, answer_delta,
+                                   extract_answer, verdict_from_feedback,
+                                   vote_agreement)
 from repro.core.feedback import FeedbackProvider, NoFeedback
 from repro.serving.request import BudgetTier, Request, Status, TokenUsage
 
@@ -43,10 +54,17 @@ class RoundRecord:
 class ReflectionResult:
     rounds: List[RoundRecord]
     usage: TokenUsage = field(default_factory=TokenUsage)
+    # routed path only: one controller Decision per completed round
+    trace: List[Decision] = field(default_factory=list)
 
     @property
     def final(self) -> RoundRecord:
         return self.rounds[-1]
+
+    @property
+    def rounds_run(self) -> int:
+        """Reflection rounds actually executed (round 0 excluded)."""
+        return max(0, len(self.rounds) - 1)
 
 
 class EngineBackend:
@@ -74,13 +92,19 @@ class EngineBackend:
         # — mirroring the engine's own request-registry pruning.
         self._prior_drafts: "OrderedDict[str, List[int]]" = OrderedDict()
         self._prior_drafts_max = 128
+        # requests of the most recent complete_many (complete_routed reads
+        # stop_reason / decision_trace off them)
+        self.last_requests: List[Request] = []
 
     def _request(self, conversation: str, conversation_id: str,
-                 budget: BudgetTier) -> Request:
+                 budget: BudgetTier,
+                 ceilings: Tuple[Optional[float], Optional[float]]
+                 = (None, None)) -> Request:
         return Request(prompt=self.tok.encode(conversation),
                        max_new_tokens=self.max_new_tokens,
                        eos_id=self.tok.eos_id, budget=budget,
                        conversation_id=conversation_id,
+                       max_cost_usd=ceilings[0], max_latency_s=ceilings[1],
                        spec_context=list(
                            self._prior_drafts.get(conversation_id, [])))
 
@@ -96,12 +120,29 @@ class EngineBackend:
                                          budget)[0]
         return text, usage
 
+    def complete_routed(self, conversation: str, conversation_id: str,
+                        budget: BudgetTier,
+                        ceilings: Tuple[Optional[float], Optional[float]]
+                        = (None, None)) -> Tuple[str, TokenUsage, Request]:
+        """One round with per-request SLO ceilings attached; returns the
+        Request too so the routed loop can read stop_reason (the engine's
+        SLO admission finalizes unfundable rounds) and append its
+        decisions to the request's trace."""
+        out = self.complete_many([(conversation, conversation_id)], budget,
+                                 ceilings=ceilings)
+        text, usage = out[0]
+        return text, usage, self.last_requests[0]
+
     def complete_many(self, conversations: List[Tuple[str, str]],
-                      budget: BudgetTier) -> List[Tuple[str, TokenUsage]]:
+                      budget: BudgetTier,
+                      ceilings: Tuple[Optional[float], Optional[float]]
+                      = (None, None)) -> List[Tuple[str, TokenUsage]]:
         """Submit a batch of (conversation, conversation_id) and poll the
         engine until all are done — their prefill chunks and decode steps
         interleave inside the engine's mixed steps."""
-        reqs = [self._request(c, cid, budget) for c, cid in conversations]
+        reqs = [self._request(c, cid, budget, ceilings)
+                for c, cid in conversations]
+        self.last_requests = reqs
         for r in reqs:
             self.engine.submit(r)
         pending = set(r.uid for r in reqs)
@@ -111,8 +152,10 @@ class EngineBackend:
             pending -= done
         for (_, cid), r in zip(conversations, reqs):
             # remember this round's raw draft for the next round's
-            # speculator (latest round per conversation; LRU-evicted)
-            if r.conversation_id is not None:
+            # speculator (latest round per conversation; LRU-evicted).
+            # An SLO-finalized request has no output — keep the prior
+            # round's draft instead of clobbering it with nothing.
+            if r.conversation_id is not None and r.output:
                 self._prior_drafts[cid] = list(r.output)
                 self._prior_drafts.move_to_end(cid)
                 while len(self._prior_drafts) > self._prior_drafts_max:
@@ -138,31 +181,55 @@ class SimulatedBackend:
         self.profile = QS.TOKEN_PROFILE[domain]
         self._convo_cached: Dict[str, int] = {}
 
-    def complete(self, conversation_tokens: int, conversation_id: str,
-                 budget: BudgetTier, thinking_tokens: int = 0
-                 ) -> TokenUsage:
+    def predict(self, conversation_tokens: int, conversation_id: str,
+                thinking_tokens: int = 0) -> TokenUsage:
+        """Exact usage the next ``complete`` call would bill, WITHOUT
+        committing it — the router's next-round cost estimate (which is
+        why simulated routing can guarantee hard SLO compliance)."""
         cached = (self._convo_cached.get(conversation_id, 0)
                   if self.prompt_caching else 0)
         cached = min(cached, conversation_tokens)
         fresh = conversation_tokens - cached
         out = self.profile["out"] + thinking_tokens
-        usage = TokenUsage(input_tokens=fresh, cache_read_tokens=cached,
-                           cache_write_tokens=fresh, output_tokens=out)
-        self._convo_cached[conversation_id] = conversation_tokens + out
+        return TokenUsage(input_tokens=fresh, cache_read_tokens=cached,
+                          cache_write_tokens=fresh, output_tokens=out)
+
+    def complete(self, conversation_tokens: int, conversation_id: str,
+                 budget: BudgetTier, thinking_tokens: int = 0
+                 ) -> TokenUsage:
+        usage = self.predict(conversation_tokens, conversation_id,
+                             thinking_tokens)
+        # thinking tokens are billed as output but are NOT part of the
+        # quoted conversation the next round re-reads — persisting them
+        # as cached context would under-bill every post-thinking round's
+        # fresh input (the reflection suffix would look already cached)
+        self._convo_cached[conversation_id] = (
+            conversation_tokens + usage.output_tokens - thinking_tokens)
         return usage
 
 
 class ReflectionController:
-    """Generic reflect-and-revise loop over either backend."""
+    """Generic reflect-and-revise loop over either backend.
+
+    ``router=None`` runs the strategy's FIXED round count — the original
+    loop, byte-for-byte (pinned by tests/test_controller.py).  With a
+    ``SweetSpotController`` the loop becomes adaptive: one
+    stop/reflect/escalate decision per round, per-request SLO ceilings,
+    and every completed request feeds the router's online frontier."""
 
     def __init__(self, strategy: InferenceStrategy,
-                 feedback: Optional[FeedbackProvider] = None):
+                 feedback: Optional[FeedbackProvider] = None,
+                 router: Optional[SweetSpotController] = None):
         self.strategy = strategy
         self.feedback = feedback or NoFeedback()
+        self.router = router
 
     # ---------------- real-engine path -----------------------------------
 
-    def run_task(self, backend: EngineBackend, task) -> ReflectionResult:
+    def run_task(self, backend: EngineBackend, task,
+                 slo: Optional[SLO] = None) -> ReflectionResult:
+        if self.router is not None:
+            return self._run_task_routed(backend, task, slo)
         convo = task.prompt()
         cid = f"task-{id(task)}"
         result = ReflectionResult(rounds=[])
@@ -180,6 +247,137 @@ class ReflectionController:
                               correct=bool(task.verify(response)))
             result.rounds.append(rec)
             result.usage += usage
+        return result
+
+    @staticmethod
+    def _engine_cap(backend: EngineBackend, tier: BudgetTier) -> int:
+        """Effective decode cap of a round at ``tier`` on this backend —
+        mirrors Engine._budget_cap (tiers cap, never extend)."""
+        scfg = backend.engine.scfg
+        caps = {BudgetTier.NONE: backend.max_new_tokens,
+                BudgetTier.LOW: scfg.max_think_tokens_low,
+                BudgetTier.HIGH: scfg.max_think_tokens_high}
+        return min(backend.max_new_tokens, caps[tier])
+
+    def _remaining(self, slo: Optional[SLO], usage: TokenUsage
+                   ) -> Tuple[Optional[float], Optional[float]]:
+        """Ceilings minus spend so far — the per-round Request ceilings
+        the engine's SLO admission checks against."""
+        if slo is None:
+            return (None, None)
+        router = self.router
+        rc = (None if slo.max_cost_usd is None
+              else max(0.0, slo.max_cost_usd - router.cm.cost(usage)))
+        rl = (None if slo.max_latency_s is None
+              else max(0.0, slo.max_latency_s - router.lm.latency(usage)))
+        return (rc, rl)
+
+    def _run_task_routed(self, backend: EngineBackend, task,
+                         slo: Optional[SLO]) -> ReflectionResult:
+        router = self.router
+        # the engine backstop is optional (slo_price_model=None leaves
+        # enforcement to the controller alone), but when BOTH sides
+        # price ceilings they must price them identically — remaining
+        # dollars computed under one model are meaningless to the other
+        eng_cm = getattr(backend.engine, "cost_model", None)
+        if slo is not None and eng_cm is not None:
+            assert (eng_cm == router.cm
+                    and backend.engine.latency_model == router.lm), \
+                "engine slo_price_model disagrees with the router's models"
+        convo = task.prompt()
+        cid = f"task-{id(task)}"
+        domain = getattr(task, "domain", "default")
+        result = ReflectionResult(rounds=[])
+        # ``tier`` is the tier of the last EXECUTED round (what observe()
+        # attributes); ``next_tier`` carries a pending escalation, which
+        # only commits once the escalated round actually runs — an
+        # engine SLO refusal must not tag the request with a thinking
+        # tier it never paid for
+        tier = next_tier = self.strategy.budget
+        planned = router.plan_rounds(domain, slo)
+        responses: List[str] = []
+        prev_response: Optional[str] = None
+        stalls = 0
+        idx = 0
+        while True:
+            response, usage, req = backend.complete_routed(
+                convo, cid, next_tier, self._remaining(slo, result.usage))
+            if req.stop_reason == "slo":
+                # the engine refused to fund the round: the previous
+                # answer stands (a refused round 0 records an empty one,
+                # and contributes no frontier observation — no strategy
+                # actually ran).  The terminal decision lands in
+                # result.trace exactly like the simulated path's refusal
+                result.usage += usage
+                rec = req.decision_trace[-1] if req.decision_trace else {}
+                result.trace.append(Decision(
+                    "stop", "slo", idx, next_tier.value,
+                    router.cm.cost(result.usage),
+                    router.lm.latency(result.usage),
+                    rec.get("pred_cost_usd", 0.0),
+                    rec.get("pred_latency_s", 0.0)))
+                if idx == 0:
+                    result.rounds.append(RoundRecord(response, usage,
+                                                     correct=False))
+                    return result
+                break
+            tier = next_tier
+            rec = RoundRecord(response, usage,
+                              correct=bool(task.verify(response)))
+            result.rounds.append(rec)
+            result.usage += usage
+            responses.append(response)
+            fb = self.feedback.feedback(task, response)
+            delta = answer_delta(prev_response, response)
+            verdict = verdict_from_feedback(fb)
+            stable = delta <= router.cfg.stable_delta
+            if stable and verdict is False:
+                stalls += 1
+            elif not stable:
+                stalls = 0
+            signals = RoundSignals(
+                round_idx=idx, answer_delta=delta, verdict=verdict,
+                vote_frac=vote_agreement([extract_answer(r)
+                                          for r in responses]),
+                stalls=stalls, tier=tier)
+            # exact-shape next-round estimate: tokenize the conversation
+            # the next round WOULD submit; the just-published snapshot
+            # makes everything up to this round's end a cache hit, the
+            # reflection suffix is fresh, decode is priced at the cap
+            # (worst case).  The engine's admission check (when
+            # ServeConfig.slo_price_model is set) is the refusing
+            # backstop for cache evictions this estimate can't see.
+            next_convo = (convo + " " + response + " "
+                          + REFLECT_TEMPLATE.format(feedback=fb,
+                                                    question=task.prompt()))
+            ntok = len(backend.tok.encode(next_convo))
+            cached_est = min(len(req.prompt) + len(req.output), ntok - 1)
+            pred = TokenUsage(input_tokens=ntok - cached_est,
+                              cache_read_tokens=cached_est,
+                              cache_write_tokens=ntok - cached_est,
+                              output_tokens=backend.max_new_tokens)
+            decision = router.decide(signals, slo, result.usage, pred,
+                                     planned_rounds=planned)
+            result.trace.append(decision)
+            req.decision_trace.append(decision.key())
+            if decision.action == "stop":
+                break
+            if decision.action == "escalate":
+                # the engine's budget tiers CAP decode steps (they never
+                # add capacity) — apply an escalation only when the new
+                # tier actually raises this request's effective cap,
+                # e.g. LOW->HIGH with max_new_tokens above the LOW cap;
+                # otherwise run a plain round at the current tier so the
+                # frontier never records a tier that changed nothing
+                cand = BudgetTier(decision.tier)
+                if self._engine_cap(backend, cand) > \
+                        self._engine_cap(backend, tier):
+                    next_tier = cand
+            prev_response = response
+            convo = next_convo
+            idx += 1
+        router.observe(domain, result.rounds_run, tier,
+                       100.0 * bool(result.final.correct), result.usage)
         return result
 
     # ---------------- simulated path (paper reproduction) ----------------
@@ -203,6 +401,117 @@ class ReflectionController:
             result.rounds.append(RoundRecord(
                 "", usage, correct=bool(correct_by_round[r + 1])))
             result.usage += usage
+        return result
+
+    def route_simulated(self, sim: SimulatedBackend, correct_by_round,
+                        slo: Optional[SLO] = None,
+                        rng: Optional[np.random.Generator] = None
+                        ) -> ReflectionResult:
+        """Adaptive counterpart of ``run_simulated`` (requires a router):
+        the same decide() policy as the engine path, driven by simulated
+        signals.
+
+        Signal model (deterministic given ``rng``): reflection re-emits
+        the prior answer unless correctness flips ("First Try Matters"),
+        so the simulated answer changes iff correctness changes — across
+        both fixes and regressions; the judge verdict is truthful w.p.
+        ``cfg.sim_judge_accuracy`` (only when the strategy carries a
+        feedback provider); the self-consistency vote counts agreeing
+        answer ids across rounds.  Because the backend's ``predict`` is
+        exact, SLO ceilings are HARD here: a round that would breach its
+        ceiling is never started (pinned by tests/test_engine_fuzz.py).
+
+        Escalated rounds consume the tier's mean thinking tokens and fix
+        a still-wrong answer w.p. ``cfg.escalation_fix_p`` (modelling
+        arXiv:2512.19585's conditional-escalation gains); a fix obtained
+        this way is retained like any other correct answer.
+
+        The hard-ceiling guarantee covers round 0 too: an SLO that
+        cannot fund even the first answer refuses the request up front —
+        an empty zero-usage round with a "slo" stop decision and no
+        frontier observation, mirroring the engine backend's admission
+        finalize."""
+        router = self.router
+        assert router is not None, "route_simulated requires a router"
+        cfg = router.cfg
+        rng = np.random.default_rng(0) if rng is None else rng
+        prof = sim.profile
+        convo_tokens = prof["prompt"]
+        cid = f"sim-{sim.rng.integers(1 << 62)}"
+        domain = sim.domain
+        result = ReflectionResult(rounds=[])
+        tier = self.strategy.budget
+        planned = router.plan_rounds(domain, slo)
+        use_judge = self.feedback.name != "none"
+
+        def tier_think(t: BudgetTier) -> int:
+            return cfg.think_tokens.get(t.value, 0) \
+                if t is not BudgetTier.NONE else 0
+
+        pred0 = sim.predict(convo_tokens, cid, tier_think(tier))
+        if slo is not None and not slo.admits(router.cm.cost(pred0),
+                                              router.lm.latency(pred0)):
+            result.rounds.append(RoundRecord("", TokenUsage(),
+                                             correct=False))
+            result.trace.append(Decision(
+                "stop", "slo", 0, tier.value, 0.0, 0.0,
+                router.cm.cost(pred0), router.lm.latency(pred0)))
+            return result
+        usage = sim.complete(convo_tokens, cid, tier, tier_think(tier))
+        history = [bool(correct_by_round[0])]
+        aids = [0]                       # simulated answer ids (vote signal)
+        result.rounds.append(RoundRecord("", usage, correct=history[0]))
+        result.usage += usage
+        forced = False                   # escalation fixed it: retained
+        stalls = 0
+        idx = 0
+        while True:
+            delta = (1.0 if len(history) < 2
+                     else float(history[-1] != history[-2]))
+            verdict = None
+            if use_judge:
+                truth = history[-1]
+                verdict = (truth if rng.random() < cfg.sim_judge_accuracy
+                           else not truth)
+            stable = delta <= cfg.stable_delta
+            if stable and verdict is False:
+                stalls += 1
+            elif not stable:
+                stalls = 0
+            # same consensus rule as the engine path: answer ids stand
+            # in for extracted answers
+            vote = vote_agreement([str(a) for a in aids])
+            nxt_tokens = (convo_tokens + prof["out"]
+                          + QS.REFLECT_PROMPT_TOKENS + prof["prompt"])
+            pred = sim.predict(nxt_tokens, cid, tier_think(tier))
+            signals = RoundSignals(round_idx=idx, answer_delta=delta,
+                                   verdict=verdict, vote_frac=vote,
+                                   stalls=stalls, tier=tier)
+            decision = router.decide(signals, slo, result.usage, pred,
+                                     planned_rounds=planned)
+            result.trace.append(decision)
+            if decision.action == "stop":
+                break
+            escalated = decision.action == "escalate"
+            if escalated:
+                tier = BudgetTier(decision.tier)
+            convo_tokens = nxt_tokens
+            usage = sim.complete(convo_tokens, cid, tier, tier_think(tier))
+            idx += 1
+            nxt_correct = (bool(correct_by_round[idx])
+                           if idx < len(correct_by_round) else history[-1])
+            if forced:
+                nxt_correct = True
+            if (escalated and not nxt_correct
+                    and rng.random() < cfg.escalation_fix_p):
+                nxt_correct = True
+                forced = True
+            aids.append(aids[-1] + 1 if nxt_correct != history[-1]
+                        else aids[-1])
+            history.append(nxt_correct)
+            result.rounds.append(RoundRecord("", usage, correct=nxt_correct))
+            result.usage += usage
+        router.observe(domain, idx, tier, 100.0 * history[-1], result.usage)
         return result
 
 

@@ -73,6 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.core.accounting import CostModel, LatencyModel
 from repro.models import layers as L
 from repro.serving import sampler
 from repro.serving.page_pool import PagePool, PagedSnapshot
@@ -161,6 +162,14 @@ class Engine:
         # Per-step fresh-prefill token budget.
         self.prefill_budget = max(1, scfg.prefill_token_budget)
 
+        # SLO-aware admission (docs/SERVING.md#slo-routing): price a
+        # queued request's predicted tokens against its own ceilings.
+        # None = check disabled (bit-identical admission).
+        self.cost_model = (CostModel.for_model(scfg.slo_price_model)
+                           if scfg.slo_price_model else None)
+        self.latency_model = (LatencyModel.for_model(scfg.slo_price_model)
+                              if scfg.slo_price_model else None)
+
         # ---- self-speculative decoding (docs/SERVING.md) ------------------
         # Gates, in order: the model must expose the all-lane verify path
         # (prefill_extend(..., all_logits=True)); recurrent state (mamba/
@@ -222,7 +231,7 @@ class Engine:
                             "max_step_prefill_tokens": 0, "preemptions": 0,
                             "starved_mixed_steps": 0,
                             "verify_steps": 0, "spec_drafted": 0,
-                            "spec_accepted": 0}
+                            "spec_accepted": 0, "slo_rejections": 0}
 
         if self.paged:
             self._decode = jax.jit(
@@ -548,6 +557,50 @@ class Engine:
 
     # ------------------------------------------------------------ admission
 
+    def _slo_reject(self, req: Request) -> bool:
+        """Deadline/cost-aware admission: finalize a fresh request whose
+        ceilings cannot fund its own predicted tokens (prefill at the
+        prefix-cache hit length it would get right now, decode at its
+        full budget cap — the worst case it may bill), freeing pages and
+        step budget for requests that can still finish inside their
+        SLOs.  Only fresh requests are checked: a preempted replay's
+        work already happened and must be resumed, and the reflection
+        controller re-prices each ROUND as its own request, so the check
+        is exactly the paper's per-round funding decision."""
+        if self.cost_model is None or req.preemptions or req.output:
+            return False
+        if req.max_cost_usd is None and req.max_latency_s is None:
+            return False
+        cached = 0
+        if self.prefix_cache is not None:
+            # peek: a pure length estimate — the admission check must not
+            # inflate hit stats or refresh LRU order (the real lookup
+            # happens at _admit for requests that pass)
+            res = self.prefix_cache.lookup(list(req.prompt),
+                                           record_miss=False, peek=True)
+            cached = min(res.cached_len, len(req.prompt) - 1)
+        fresh = len(req.prompt) - cached
+        pred = TokenUsage(input_tokens=fresh, cache_read_tokens=cached,
+                          cache_write_tokens=fresh,
+                          output_tokens=self._budget_cap(req))
+        cost = self.cost_model.cost(pred)
+        lat = self.latency_model.latency(pred)
+        if ((req.max_cost_usd is None or cost <= req.max_cost_usd + 1e-12)
+                and (req.max_latency_s is None
+                     or lat <= req.max_latency_s + 1e-9)):
+            return False
+        req.status = Status.DONE
+        req.stop_reason = "slo"
+        req.decision_trace.append(
+            {"action": "finalize", "reason": "slo",
+             "pred_cost_usd": cost, "pred_latency_s": lat,
+             "max_cost_usd": req.max_cost_usd,
+             "max_latency_s": req.max_latency_s})
+        self.model_steps["slo_rejections"] += 1
+        self.finished.append(req)
+        self.requests.pop(req.uid, None)
+        return True
+
     def _admit(self, req: Request, slot: int) -> None:
         """Assign a queued request to a free slot.  No model work happens
         here — prefill is chunked into subsequent mixed steps.  After a
@@ -857,10 +910,13 @@ class Engine:
 
     def step(self) -> bool:
         """One scheduler tick.  Returns False when fully idle."""
-        # admit queued requests into free slots (no model work yet)
+        # admit queued requests into free slots (no model work yet);
+        # SLO-unfundable requests finalize without consuming a slot
         for slot in range(len(self.slots)):
-            if self.slots[slot] is None and self.queue:
-                self._admit(self.queue.popleft(), slot)
+            while self.slots[slot] is None and self.queue:
+                req = self.queue.popleft()
+                if not self._slo_reject(req):
+                    self._admit(req, slot)
         if not any(r is not None for r in self.slots):
             return bool(self.queue)
 

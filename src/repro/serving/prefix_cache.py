@@ -120,13 +120,17 @@ class PrefixCache:
                       "boundary_snapshots": 0}
 
     def lookup(self, tokens: List[int], min_len: int = 0,
-               record_miss: bool = True) -> LookupResult:
+               record_miss: bool = True, peek: bool = False) -> LookupResult:
         """Longest usable stored prefix of ``tokens``.
 
         ``min_len``: only return (and only count in stats) an entry
         strictly longer than this — the engine's in-flight fast-forward
         passes its current prefill progress (with ``record_miss=False``)
         so repeated per-tick polling does not inflate the statistics.
+
+        ``peek``: length estimate only — no hit/miss stats, no LRU
+        refresh, no cache payload (the SLO admission check must not
+        perturb eviction order or double-count the admission lookup).
         """
         key = tuple(tokens)
         best: Optional[Tuple[int, Entry, str]] = None
@@ -150,10 +154,12 @@ class PrefixCache:
         if best is not None and best[0] <= min_len:
             return LookupResult(0, None, "miss")
         if best is None:
-            if record_miss:
+            if record_miss and not peek:
                 self.stats["misses"] += 1
             return LookupResult(0, None, "miss")
         plen, entry, kind = best
+        if peek:
+            return LookupResult(plen, None, kind)
         entry.last_used = time.monotonic()
         entry.hits += 1
         self.stats["hits" if kind == "full" else "partial_hits"] += 1

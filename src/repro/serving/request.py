@@ -51,6 +51,22 @@ class Request:
     round_idx: int = 0                      # reflection round
     uid: int = field(default_factory=lambda: next(_uid))
 
+    # ---- SLO routing (docs/SERVING.md#slo-routing) ------------------
+    # REMAINING per-request ceilings (the reflection controller deducts
+    # prior rounds' spend before each round's request), priced via
+    # ServeConfig.slo_price_model.  When that model is configured and a
+    # ceiling is set, the engine's admission check finalizes (stop_reason
+    # "slo", empty output) requests whose predicted tokens cannot fit —
+    # freeing pages and step budget for requests that can still finish.
+    # None disables the check for this request.
+    max_cost_usd: Optional[float] = None
+    max_latency_s: Optional[float] = None
+    # Per-request decision log: controller Decision.key() tuples appended
+    # by core/reflection.py's routed loop, dict records appended by the
+    # engine's SLO admission check.  Purely observational — replaying a
+    # preempted request must not change it.
+    decision_trace: List = field(default_factory=list)
+
     # runtime state
     status: Status = Status.QUEUED
     output: List[int] = field(default_factory=list)

@@ -20,6 +20,9 @@ from repro.models.registry import build_model, get_smoke_config
 from repro.serving.engine import Engine
 from repro.serving.request import Request, Status
 
+# jit-compile-heavy end-to-end module: deselected by `make test-fast`
+pytestmark = pytest.mark.slow
+
 PARITY_ARCHS = ["qwen3_0_6b", "granite_moe_1b_a400m", "falcon_mamba_7b",
                 "recurrentgemma_9b"]
 

@@ -1,0 +1,459 @@
+"""Online sweet-spot controller tests (core/controller.py + the routed
+reflection loop in core/reflection.py + the engine's SLO admission).
+
+Pins the PR's acceptance contract:
+  * controller-off (router=None) and a NEUTRAL router (every adaptive
+    rule disabled) are bit-identical to the fixed-round loop — outputs
+    AND TokenUsage — on both the simulated and the real-engine backend;
+  * same seed + workload => identical per-request decision traces across
+    two SimulatedBackend runs and across repeated preemption-heavy
+    EngineBackend runs (replay must not change routing);
+  * the engine finalizes requests whose ceilings cannot fund their
+    predicted tokens, and routed requests never exceed their SLOs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import quality_sim as QS
+from repro.core.accounting import CostModel, LatencyModel
+from repro.core.budget import InferenceStrategy
+from repro.core.controller import (ControllerConfig, RoundSignals, SLO,
+                                   SweetSpotController, answer_delta,
+                                   extract_answer, trace_key,
+                                   verdict_from_feedback, vote_agreement)
+from repro.core.feedback import LLMJudgeFeedback
+from repro.core.reflection import (EngineBackend, ReflectionController,
+                                   SimulatedBackend)
+from repro.serving.request import BudgetTier, Request, Status, TokenUsage
+
+
+def _router(**cfg_kw):
+    return SweetSpotController(CostModel.for_model("nova_micro"),
+                               LatencyModel.for_model("nova_micro"),
+                               ControllerConfig(**cfg_kw))
+
+
+def neutral_config(rounds: int) -> ControllerConfig:
+    """Every adaptive rule off: the router must reproduce the fixed
+    ``rounds``-round loop decision-for-decision."""
+    return ControllerConfig(max_rounds=rounds, stop_on_stable=False,
+                            use_verdict=False, use_vote=False,
+                            escalate=False, warm_start=False)
+
+
+# ---------------------------------------------------------------------------
+# signal extraction
+# ---------------------------------------------------------------------------
+
+def test_answer_delta_tagged_and_fuzzy():
+    a = "thinking... <answer>42</answer>"
+    b = "different reasoning <answer> 42 </answer>"
+    c = "<answer>43</answer>"
+    assert answer_delta(None, a) == 1.0
+    assert answer_delta(a, b) == 0.0           # same extracted answer
+    assert answer_delta(a, c) == 1.0           # different extracted answer
+    assert 0.0 < answer_delta("abcd efgh", "abcd efgi") < 0.5  # fuzzy path
+
+
+def test_extract_answer_tag_vocabulary():
+    assert extract_answer("<answer>7</answer>") == "7"
+    assert extract_answer("x <SQL>SELECT 1</SQL> y") == "SELECT 1"
+    assert extract_answer("<sentiment>positive</sentiment>") == "positive"
+    assert extract_answer("no tags here") is None
+
+
+def test_verdict_from_feedback():
+    assert verdict_from_feedback("Judge feedback: CORRECT — fine.") is True
+    assert verdict_from_feedback("Judge feedback: INCORRECT — redo.") is False
+    assert verdict_from_feedback(
+        "Execution feedback: query failed with error: x") is False
+    assert verdict_from_feedback(
+        "Execution feedback: query returned 3 row(s); first rows: []") is None
+    assert verdict_from_feedback("") is None
+
+
+def test_vote_agreement():
+    assert vote_agreement(["a"]) == 0.0                   # no quorum yet
+    assert vote_agreement(["a", "a", "b"]) == pytest.approx(2 / 3)
+    assert vote_agreement(["a", None, "a"]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# decide(): the stop/reflect/escalate policy
+# ---------------------------------------------------------------------------
+
+SPEND = TokenUsage(input_tokens=250, cache_write_tokens=250,
+                   output_tokens=330)
+NEXT = TokenUsage(input_tokens=625, cache_write_tokens=625,
+                  cache_read_tokens=580, output_tokens=330)
+
+
+def test_decide_round_cap_and_planned_cap():
+    r = _router()
+    d = r.decide(RoundSignals(round_idx=3), None, SPEND, NEXT)
+    assert (d.action, d.reason) == ("stop", "round-cap")
+    d = r.decide(RoundSignals(round_idx=0), None, SPEND, NEXT,
+                 planned_rounds=0)
+    assert (d.action, d.reason) == ("stop", "round-cap")
+
+
+def test_decide_slo_stops_before_breach():
+    r = _router()
+    spend_cost = r.cm.cost(SPEND)
+    pred_cost = r.cm.cost(NEXT)
+    # ceiling funds the spend but not one more round -> stop, and the
+    # recorded spend respects the ceiling
+    slo = SLO(max_cost_usd=spend_cost + 0.5 * pred_cost)
+    d = r.decide(RoundSignals(round_idx=1), slo, SPEND, NEXT)
+    assert (d.action, d.reason) == ("stop", "slo")
+    assert d.cost_usd <= slo.max_cost_usd
+    # a funded round continues
+    slo = SLO(max_cost_usd=spend_cost + 2 * pred_cost)
+    d = r.decide(RoundSignals(round_idx=1), slo, SPEND, NEXT)
+    assert d.action == "reflect"
+
+
+def test_decide_quality_signals():
+    r = _router()
+    stop = r.decide(RoundSignals(round_idx=1, verdict=True), None,
+                    SPEND, NEXT)
+    assert (stop.action, stop.reason) == ("stop", "verdict-correct")
+    # round 0 is never accepted on a verdict alone
+    d0 = r.decide(RoundSignals(round_idx=0, verdict=True), None,
+                  SPEND, NEXT)
+    assert d0.action == "reflect"
+    stable = r.decide(RoundSignals(round_idx=1, answer_delta=0.0), None,
+                      SPEND, NEXT)
+    assert (stable.action, stable.reason) == ("stop", "stable")
+    cons = r.decide(RoundSignals(round_idx=2, vote_frac=1.0), None,
+                    SPEND, NEXT)
+    assert (cons.action, cons.reason) == ("stop", "consensus")
+    # a contrary verdict blocks the stable stop
+    go = r.decide(RoundSignals(round_idx=1, answer_delta=0.0,
+                               verdict=False), None, SPEND, NEXT)
+    assert go.action == "reflect"
+
+
+def test_decide_escalates_even_with_stable_stop_disabled():
+    """stop_on_stable=False disables the STOP rule only — a stably-wrong
+    stalled request must still escalate (the raw unchanged signal, not
+    the gated one, drives escalation)."""
+    r = _router(stop_on_stable=False)
+    d = r.decide(RoundSignals(round_idx=1, answer_delta=0.0, verdict=False,
+                              stalls=2, tier=BudgetTier.NONE), None,
+                 SPEND, NEXT)
+    assert (d.action, d.tier) == ("escalate", "low")
+
+
+def test_decide_escalation_conditional():
+    r = _router()
+    sig = RoundSignals(round_idx=1, answer_delta=0.0, verdict=False,
+                       stalls=2, tier=BudgetTier.NONE)
+    d = r.decide(sig, None, SPEND, NEXT)
+    assert (d.action, d.tier) == ("escalate", "low")
+    assert d.pred_cost_usd > r.cm.cost(NEXT)   # escalation priced in
+    # unaffordable escalation degrades to a plain (funded) reflect
+    slo = SLO(max_cost_usd=r.cm.cost(SPEND) + 1.5 * r.cm.cost(NEXT))
+    d = r.decide(sig, slo, SPEND, NEXT)
+    assert d.action == "reflect"
+    # not yet stalled long enough
+    d = r.decide(RoundSignals(round_idx=1, answer_delta=0.0, verdict=False,
+                              stalls=1, tier=BudgetTier.NONE), None,
+                 SPEND, NEXT)
+    assert d.action == "reflect"
+    # HIGH has nowhere to escalate
+    d = r.decide(RoundSignals(round_idx=1, answer_delta=0.0, verdict=False,
+                              stalls=3, tier=BudgetTier.HIGH), None,
+                 SPEND, NEXT)
+    assert d.action == "reflect"
+
+
+def test_plan_rounds_explore_then_warm():
+    r = _router(min_obs=2, max_rounds=3)
+    # cold: deterministic round-robin over 0..3
+    plans = []
+    for i in range(8):
+        plans.append(r.plan_rounds("d"))
+        r.observe("d", plans[-1], BudgetTier.NONE, 50.0,
+                  TokenUsage(input_tokens=100, output_tokens=100))
+    assert plans == [0, 1, 2, 3, 0, 1, 2, 3]
+    # warm, reflection dominated: route to 0
+    r2 = _router(min_obs=2, max_rounds=3)
+    for q0, q3 in [(90.0, 60.0)] * 8:
+        r2.observe("d", 0, BudgetTier.NONE, q0,
+                   TokenUsage(input_tokens=100, output_tokens=100))
+        r2.observe("d", 3, BudgetTier.NONE, q3,
+                   TokenUsage(input_tokens=400, output_tokens=400))
+    assert r2.plan_rounds("d") == 0
+    # warm, reflection wins: full ceiling (depth comes from signals)
+    r3 = _router(min_obs=2, max_rounds=3)
+    for q0, q3 in [(50.0, 90.0)] * 8:
+        r3.observe("d", 0, BudgetTier.NONE, q0,
+                   TokenUsage(input_tokens=100, output_tokens=100))
+        r3.observe("d", 3, BudgetTier.NONE, q3,
+                   TokenUsage(input_tokens=400, output_tokens=400))
+    assert r3.plan_rounds("d") == 3
+    # ...unless this request's ceiling only affords the cheap point
+    cheap = r3.cm.cost(TokenUsage(input_tokens=100, output_tokens=100))
+    assert r3.plan_rounds("d", SLO(max_cost_usd=cheap * 1.5)) == 0
+
+
+# ---------------------------------------------------------------------------
+# simulated backend: parity + determinism + SLO compliance
+# ---------------------------------------------------------------------------
+
+def _sim_pair(domain="math500", seed=3):
+    return (SimulatedBackend("nova_micro", domain, seed=seed),
+            SimulatedBackend("nova_micro", domain, seed=seed))
+
+
+def test_neutral_router_bit_parity_simulated():
+    """Neutral router == fixed loop on the simulated backend: identical
+    per-round usage and totals for every strategy depth."""
+    traj = QS.simulate_trajectories("math500", "nova_micro", 8, 3, seed=1)
+    for rounds in (0, 1, 3):
+        sim_a, sim_b = _sim_pair()
+        fixed = ReflectionController(InferenceStrategy(rounds))
+        routed = ReflectionController(
+            InferenceStrategy(rounds),
+            router=SweetSpotController(
+                CostModel.for_model("nova_micro"),
+                LatencyModel.for_model("nova_micro"),
+                neutral_config(rounds)))
+        for i in range(8):
+            ra = fixed.run_simulated(sim_a, traj.correct[i][:rounds + 1])
+            rb = routed.route_simulated(sim_b, traj.correct[i])
+            assert len(ra.rounds) == len(rb.rounds) == rounds + 1
+            for x, y in zip(ra.rounds, rb.rounds):
+                assert x.usage == y.usage
+                assert x.correct == y.correct
+            assert ra.usage == rb.usage
+            assert [d.action for d in rb.trace] == \
+                ["reflect"] * rounds + ["stop"]
+
+
+def test_route_simulated_seeded_determinism():
+    """Same seed + workload -> identical decision traces, twice."""
+    traj = QS.simulate_trajectories("math500", "nova_micro", 12, 3, seed=5)
+    slo_rng = np.random.default_rng(9)
+    slos = [SLO(max_cost_usd=0.0002 * slo_rng.uniform(1, 4),
+                max_latency_s=10.0 * slo_rng.uniform(1, 4))
+            for _ in range(12)]
+    runs = []
+    for _ in range(2):
+        sim = SimulatedBackend("nova_micro", "math500", seed=3)
+        ctrl = ReflectionController(InferenceStrategy(3, feedback="judge"),
+                                    feedback=LLMJudgeFeedback(seed=0),
+                                    router=_router())
+        rng = np.random.default_rng(11)
+        runs.append([trace_key(
+            ctrl.route_simulated(sim, traj.correct[i], slos[i], rng).trace)
+            for i in range(12)])
+    assert runs[0] == runs[1]
+    # and the traces are non-trivial (some request reflected or stopped)
+    assert any(len(t) > 1 for t in runs[0])
+
+
+def test_route_simulated_refuses_unfundable_round0():
+    """An SLO below round 0's cost refuses the request up front: zero
+    usage, one 'slo' stop decision, no frontier observation — mirroring
+    the engine's admission finalize."""
+    router = _router()
+    ctrl = ReflectionController(InferenceStrategy(3), router=router)
+    sim = SimulatedBackend("nova_micro", "math500", seed=3)
+    res = ctrl.route_simulated(sim, [True, True, True, True],
+                               SLO(max_cost_usd=1e-9),
+                               np.random.default_rng(0))
+    assert res.usage == TokenUsage()
+    assert res.rounds_run == 0 and res.final.correct is False
+    assert [(d.action, d.reason) for d in res.trace] == [("stop", "slo")]
+    assert router._domain_obs.get("math500", 0) == 0
+
+
+def test_route_simulated_respects_ceilings_and_monotone_spend():
+    traj = QS.simulate_trajectories("math500", "nova_micro", 16, 3, seed=2)
+    router = _router()
+    ctrl = ReflectionController(InferenceStrategy(3, feedback="judge"),
+                                feedback=LLMJudgeFeedback(seed=0),
+                                router=router)
+    sim = SimulatedBackend("nova_micro", "math500", seed=3)
+    rng = np.random.default_rng(4)
+    for i in range(16):
+        slo = SLO(max_cost_usd=0.0001 * (1.0 + i / 4),
+                  max_latency_s=5.0 * (1.0 + i / 4))
+        res = ctrl.route_simulated(sim, traj.correct[i], slo, rng)
+        costs = [d.cost_usd for d in res.trace]
+        assert costs == sorted(costs), "spend must be monotone over rounds"
+        # hard ceilings: the total bill (which includes round 0 — always
+        # funded by construction here) never exceeds the SLO
+        assert slo.admits(router.cm.cost(res.usage),
+                          router.lm.latency(res.usage))
+
+
+# ---------------------------------------------------------------------------
+# real-engine backend: parity, SLO admission, preemption determinism
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    jax = pytest.importorskip("jax")
+    from repro.models.registry import build_model, get_smoke_config
+    cfg = get_smoke_config("reflect_demo_100m").replace(dtype="float32")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _engine(m, params, **kw):
+    from repro.configs.base import ServeConfig
+    from repro.serving.engine import Engine
+    base = dict(max_batch=2, max_seq=1024, page_size=32,
+                slo_price_model="nova_micro")
+    return Engine(m, params, ServeConfig(**{**base, **kw}))
+
+
+class _TinyTask:
+    """Deterministic task with a real verifier (engine outputs are noise
+    text from an untrained model, which is fine: routing decisions only
+    need the signals to be deterministic)."""
+    domain = "math500"
+
+    def prompt(self):
+        return ("What is 2 + 3? State your final answer in "
+                "<answer></answer> tags.")
+
+    def verify(self, response):
+        return extract_answer(response) == "5"
+
+
+@pytest.mark.slow
+def test_neutral_router_bit_parity_engine(engine_setup):
+    """Controller off == neutral controller on the REAL engine: outputs
+    and TokenUsage bit-identical to the fixed-round loop."""
+    from repro.data.tokenizer import ByteTokenizer
+    m, params = engine_setup
+    task = _TinyTask()
+    results = {}
+    for mode in ("off", "neutral"):
+        backend = EngineBackend(_engine(m, params), ByteTokenizer(),
+                                max_new_tokens=16)
+        router = None if mode == "off" else SweetSpotController(
+            CostModel.for_model("nova_micro"),
+            LatencyModel.for_model("nova_micro"), neutral_config(2))
+        ctrl = ReflectionController(InferenceStrategy(2), router=router)
+        results[mode] = ctrl.run_task(backend, task)
+    a, b = results["off"], results["neutral"]
+    assert len(a.rounds) == len(b.rounds) == 3
+    for x, y in zip(a.rounds, b.rounds):
+        assert x.response == y.response
+        assert x.usage == y.usage
+    assert a.usage == b.usage
+    assert a.trace == [] and [d.action for d in b.trace] == \
+        ["reflect", "reflect", "stop"]
+
+
+@pytest.mark.slow
+def test_engine_slo_admission_finalizes_unfundable(engine_setup):
+    from repro.data.tokenizer import ByteTokenizer
+    m, params = engine_setup
+    # prefix_cache off so the pool-empty check below sees no snapshot pins
+    eng = _engine(m, params, prefix_cache=False)
+    tok = ByteTokenizer()
+    prompt = tok.encode("hello " * 10)
+    poor = Request(prompt=list(prompt), max_new_tokens=8, eos_id=None,
+                   max_cost_usd=1e-9)
+    rich = Request(prompt=list(prompt), max_new_tokens=8, eos_id=None,
+                   max_cost_usd=1.0)
+    free = Request(prompt=list(prompt), max_new_tokens=8, eos_id=None)
+    for r in (poor, rich, free):
+        eng.submit(r)
+    eng.run()
+    assert poor.status is Status.DONE and poor.stop_reason == "slo"
+    assert poor.output == [] and poor.usage == TokenUsage()
+    assert poor.decision_trace and \
+        poor.decision_trace[0]["reason"] == "slo"
+    assert poor.decision_trace[0]["pred_cost_usd"] > 1e-9
+    for r in (rich, free):
+        assert r.status is Status.DONE and r.stop_reason != "slo"
+        assert len(r.output) == 8
+    assert eng.model_steps["slo_rejections"] == 1
+    if eng.paged:
+        eng.pool.check()
+        assert eng.pool.used_pages == 0
+
+
+@pytest.mark.slow
+def test_routed_engine_refusal_records_stop_decision(engine_setup):
+    """An engine SLO refusal of round 0 must surface in result.trace as
+    a terminal stop/'slo' decision — same contract as the simulated
+    path's refusal."""
+    from repro.data.tokenizer import ByteTokenizer
+    m, params = engine_setup
+    backend = EngineBackend(_engine(m, params), ByteTokenizer(),
+                            max_new_tokens=8)
+    ctrl = ReflectionController(InferenceStrategy(2), router=_router())
+    res = ctrl.run_task(backend, _TinyTask(), SLO(max_cost_usd=1e-9))
+    assert res.usage == TokenUsage() and res.rounds_run == 0
+    assert [(d.action, d.reason) for d in res.trace] == [("stop", "slo")]
+    assert res.trace[0].pred_cost_usd > 1e-9
+
+
+@pytest.mark.slow
+def test_engine_slo_admission_uses_deadline(engine_setup):
+    from repro.data.tokenizer import ByteTokenizer
+    m, params = engine_setup
+    eng = _engine(m, params)
+    tok = ByteTokenizer()
+    req = Request(prompt=list(tok.encode("x" * 50)), max_new_tokens=8,
+                  eos_id=None, max_latency_s=1e-6)
+    eng.submit(req)
+    eng.run()
+    assert req.stop_reason == "slo"
+    assert req.decision_trace[0]["pred_latency_s"] > 1e-6
+
+
+@pytest.mark.slow
+def test_routed_engine_determinism_under_preemption(engine_setup):
+    """Same seed + workload -> identical per-request decision traces
+    across two preemption-heavy EngineBackend runs (replay must not
+    change routing), and the same action sequence as an ample-pool run."""
+    from repro.data.tokenizer import ByteTokenizer
+    m, params = engine_setup
+    task = _TinyTask()
+
+    def routed_run(num_pages):
+        # 48 pages is the floor (one max_seq request); the routed round-2
+        # conversation (~36 pages) plus the filler (~16) exceed it, so
+        # the tight pool must preempt mid-round
+        eng = _engine(m, params, max_seq=768, page_size=16,
+                      num_pages=num_pages)
+        backend = EngineBackend(eng, ByteTokenizer(), max_new_tokens=16)
+        router = SweetSpotController(
+            CostModel.for_model("nova_micro"),
+            LatencyModel.for_model("nova_micro"),
+            ControllerConfig(max_rounds=2, warm_start=False))
+        ctrl = ReflectionController(InferenceStrategy(2), router=router)
+        # concurrent filler request creates page-pool pressure: the
+        # routed rounds (younger) get preempted and replayed
+        filler = Request(prompt=[1] + list(range(3, 182)),
+                         max_new_tokens=64, eos_id=None)
+        eng.submit(filler)
+        res = ctrl.run_task(backend, task,
+                            SLO(max_cost_usd=1.0, max_latency_s=1e4))
+        eng.run()                       # drain the filler
+        return res, eng.model_steps["preemptions"], filler
+
+    tight_a, preempt_a, _ = routed_run(num_pages=48)
+    tight_b, preempt_b, _ = routed_run(num_pages=48)
+    ample, preempt_c, _ = routed_run(num_pages=0)     # 0 = auto (ample)
+    assert preempt_a > 0, "workload was not preemption-heavy"
+    assert preempt_a == preempt_b
+    assert trace_key(tight_a.trace) == trace_key(tight_b.trace)
+    assert [r.response for r in tight_a.rounds] == \
+        [r.response for r in tight_b.rounds]
+    assert tight_a.usage == tight_b.usage
+    # routing actions are a pure function of the outputs, which replay
+    # preserves — so the ample-pool run takes the same decisions
+    assert [(d.action, d.reason) for d in tight_a.trace] == \
+        [(d.action, d.reason) for d in ample.trace]
+    assert [r.response for r in tight_a.rounds] == \
+        [r.response for r in ample.rounds]

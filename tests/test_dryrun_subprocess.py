@@ -7,6 +7,9 @@ import sys
 
 import pytest
 
+# jit-compile-heavy end-to-end module: deselected by `make test-fast`
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -11,6 +11,9 @@ from repro.serving.engine import Engine
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import BudgetTier, Request, Status
 
+# jit-compile-heavy end-to-end module: deselected by `make test-fast`
+pytestmark = pytest.mark.slow
+
 
 def make_engine(arch="qwen3_0_6b", **kw):
     cfg = get_smoke_config(arch).replace(dtype="float32")

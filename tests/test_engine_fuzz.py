@@ -1,16 +1,49 @@
 """Hypothesis fuzzing of the serving engine: random request mixes must
 preserve the engine's core invariants (cache-identity, accounting
-conservation, completion) — and speculation toggled on/off must be
-bit-identical at temperature 0 across attn/MoE/hybrid archs."""
+conservation, completion) — speculation toggled on/off must be
+bit-identical at temperature 0 across attn/MoE/hybrid archs — and the
+sweet-spot controller must keep its routing invariants (monotone spend,
+hard SLO ceilings, controller-off bit-parity) under arbitrary quality
+trajectories and SLOs."""
 import jax
+import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dep: skip, don't error
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+# hypothesis is optional: the engine fuzz tests skip without it, while
+# the controller-invariant tests fall back to a seeded random-case
+# generator exercising the SAME property checks.
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):                  # decorator shim: skip the test
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class HealthCheck:
+        function_scoped_fixture = None
+
+    st = None
+requires_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")
 
 from repro.configs.base import ServeConfig
+from repro.core.accounting import CostModel, LatencyModel
+from repro.core.budget import InferenceStrategy
+from repro.core.controller import (ControllerConfig, SLO,
+                                   SweetSpotController, trace_key)
+from repro.core.feedback import LLMJudgeFeedback
+from repro.core.reflection import ReflectionController, SimulatedBackend
 from repro.models.registry import build_model, get_smoke_config
 from repro.serving.engine import Engine
-from repro.serving.request import BudgetTier, Request, Status
+from repro.serving.request import BudgetTier, Request, Status, TokenUsage
+
+pytestmark = pytest.mark.fuzz
 
 
 @pytest.fixture(scope="module")
@@ -20,22 +53,25 @@ def model_setup():
     return m, m.init(jax.random.PRNGKey(0))
 
 
-req_strategy = st.lists(
-    st.tuples(
-        st.lists(st.integers(3, 250), min_size=1, max_size=24),  # prompt
-        st.integers(1, 8),                                       # max_new
-        st.sampled_from([BudgetTier.NONE, BudgetTier.LOW]),
-    ),
-    min_size=1, max_size=5)
+if HAVE_HYPOTHESIS:
+    req_strategy = st.lists(
+        st.tuples(
+            st.lists(st.integers(3, 250), min_size=1, max_size=24),  # prompt
+            st.integers(1, 8),                                       # max_new
+            st.sampled_from([BudgetTier.NONE, BudgetTier.LOW]),
+        ),
+        min_size=1, max_size=5)
+
+    spec_strategy = st.tuples(
+        st.lists(st.integers(3, 250), min_size=3, max_size=10),  # motif
+        st.integers(2, 4),                                       # repetitions
+        st.integers(3, 10),                                      # max_new
+    )
+else:
+    req_strategy = spec_strategy = None
 
 
-spec_strategy = st.tuples(
-    st.lists(st.integers(3, 250), min_size=3, max_size=10),  # repeated motif
-    st.integers(2, 4),                                       # repetitions
-    st.integers(3, 10),                                      # max_new
-)
-
-
+@requires_hypothesis
 @settings(max_examples=6, deadline=None,
           suppress_health_check=[HealthCheck.function_scoped_fixture])
 @given(args=spec_strategy)
@@ -68,6 +104,7 @@ def test_engine_fuzz_spec_parity(model_setup, args):
     assert outs[True] == outs[False], "speculation changed greedy outputs"
 
 
+@requires_hypothesis
 @settings(max_examples=10, deadline=None,
           suppress_health_check=[HealthCheck.function_scoped_fixture])
 @given(reqs=req_strategy)
@@ -92,3 +129,126 @@ def test_engine_fuzz_invariants(model_setup, reqs):
                     == len(p) + 1)
         outs[pc] = [r.output for r in rr]
     assert outs[True] == outs[False], "prefix cache changed outputs"
+
+
+# ---------------------------------------------------------------------------
+# sweet-spot controller invariants (simulated backend: exact predictions,
+# so the ceilings are HARD; no jax involved).  These run WITHOUT
+# hypothesis too: the same property checks are driven by a seeded
+# random-case generator when the dependency is missing.
+# ---------------------------------------------------------------------------
+
+def _random_controller_reqs(rng: np.random.Generator):
+    """Mirror of controller_strategy for the no-hypothesis fallback."""
+    return [(
+        [bool(rng.integers(2)) for _ in range(4)],       # correctness/round
+        float(rng.uniform(1.5, 8.0)),                    # cost ceiling mult
+        float(rng.uniform(1.5, 8.0)),                    # latency ceiling mult
+        ["none", "judge"][int(rng.integers(2))],         # feedback provider
+    ) for _ in range(int(rng.integers(1, 7)))]
+
+
+if HAVE_HYPOTHESIS:
+    controller_strategy = st.lists(
+        st.tuples(
+            st.lists(st.booleans(), min_size=4, max_size=4),
+            st.floats(1.5, 8.0),
+            st.floats(1.5, 8.0),
+            st.sampled_from(["none", "judge"]),
+        ),
+        min_size=1, max_size=6)
+else:
+    controller_strategy = None
+
+
+def _round0_usage(domain="math500"):
+    from repro.core.quality_sim import TOKEN_PROFILE
+    prof = TOKEN_PROFILE[domain]
+    return TokenUsage(input_tokens=prof["prompt"],
+                      cache_write_tokens=prof["prompt"],
+                      output_tokens=prof["out"])
+
+
+def _check_controller_invariants(reqs, seed):
+    """Arbitrary quality trajectories + SLOs: spend is monotone across
+    rounds, ceilings are never exceeded, and every round is accounted
+    exactly once."""
+    cm = CostModel.for_model("nova_micro")
+    lm = LatencyModel.for_model("nova_micro")
+    router = SweetSpotController(cm, lm)
+    c0, l0 = cm.cost(_round0_usage()), lm.latency(_round0_usage())
+    rng = np.random.default_rng(seed)
+    sim = SimulatedBackend("nova_micro", "math500", seed=seed % 1000)
+    for row, cmult, lmult, fb in reqs:
+        ctrl = ReflectionController(
+            InferenceStrategy(3, feedback=fb),
+            feedback=(LLMJudgeFeedback(seed=0) if fb == "judge" else None),
+            router=router)
+        slo = SLO(max_cost_usd=c0 * cmult, max_latency_s=l0 * lmult)
+        res = ctrl.route_simulated(sim, row, slo, rng)
+        costs = [d.cost_usd for d in res.trace]
+        lats = [d.latency_s for d in res.trace]
+        assert costs == sorted(costs), "spend not monotone"
+        assert lats == sorted(lats), "latency not monotone"
+        assert len(res.trace) == res.rounds_run + 1, \
+            "one decision per completed round"
+        assert res.trace[-1].action == "stop"
+        assert all(d.action in ("reflect", "escalate")
+                   for d in res.trace[:-1])
+        # HARD ceilings (round 0 is fundable by construction: mult >= 1.5)
+        assert cm.cost(res.usage) <= slo.max_cost_usd + 1e-12
+        assert lm.latency(res.usage) <= slo.max_latency_s + 1e-9
+        # conservation: per-round usage sums to the total
+        total = TokenUsage()
+        for r in res.rounds:
+            total += r.usage
+        assert total == res.usage
+
+
+def _check_controller_off_parity(reqs, rounds):
+    """A NEUTRAL controller (every adaptive rule disabled, no SLO) must
+    be decision-for-decision identical to the fixed-round loop: same
+    per-round usage, same totals, `rounds` reflects then one stop."""
+    cm = CostModel.for_model("nova_micro")
+    lm = LatencyModel.for_model("nova_micro")
+    neutral = ControllerConfig(max_rounds=rounds, stop_on_stable=False,
+                               use_verdict=False, use_vote=False,
+                               escalate=False, warm_start=False)
+    sim_fixed = SimulatedBackend("nova_micro", "math500", seed=7)
+    sim_routed = SimulatedBackend("nova_micro", "math500", seed=7)
+    fixed = ReflectionController(InferenceStrategy(rounds))
+    routed = ReflectionController(
+        InferenceStrategy(rounds),
+        router=SweetSpotController(cm, lm, neutral))
+    for row, _, _, _ in reqs:
+        ra = fixed.run_simulated(sim_fixed, row[:rounds + 1])
+        rb = routed.route_simulated(sim_routed, row)
+        assert [r.usage for r in ra.rounds] == [r.usage for r in rb.rounds]
+        assert [r.correct for r in ra.rounds] == \
+            [r.correct for r in rb.rounds]
+        assert ra.usage == rb.usage
+        assert [d.action for d in rb.trace] == ["reflect"] * rounds + ["stop"]
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(reqs=controller_strategy, seed=st.integers(0, 2**31 - 1))
+    def test_controller_fuzz_invariants(reqs, seed):
+        _check_controller_invariants(reqs, seed)
+
+    @settings(max_examples=30, deadline=None)
+    @given(reqs=controller_strategy, rounds=st.sampled_from([0, 1, 3]))
+    def test_controller_off_bit_parity(reqs, rounds):
+        _check_controller_off_parity(reqs, rounds)
+else:
+    def test_controller_fuzz_invariants():
+        rng = np.random.default_rng(0)
+        for _ in range(30):
+            _check_controller_invariants(_random_controller_reqs(rng),
+                                         int(rng.integers(1 << 31)))
+
+    def test_controller_off_bit_parity():
+        rng = np.random.default_rng(1)
+        for _ in range(30):
+            _check_controller_off_parity(_random_controller_reqs(rng),
+                                         [0, 1, 3][int(rng.integers(3))])

@@ -8,6 +8,9 @@ import pytest
 from repro.models.registry import (EXTRA_ARCH_IDS, build_model,
                                    get_smoke_config, model_inputs)
 
+# jit-compile-heavy end-to-end module: deselected by `make test-fast`
+pytestmark = pytest.mark.slow
+
 
 def _f32(a):
     return np.asarray(a, dtype=np.float32)

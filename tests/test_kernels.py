@@ -10,6 +10,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
+# jit-compile-heavy end-to-end module: deselected by `make test-fast`
+pytestmark = pytest.mark.slow
+
 
 def _mk(key, shape, dtype):
     x = jax.random.normal(key, shape, jnp.float32)

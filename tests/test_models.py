@@ -13,6 +13,9 @@ import pytest
 from repro.models.registry import (ARCH_IDS, build_model, get_smoke_config,
                                    model_inputs)
 
+# jit-compile-heavy end-to-end module: deselected by `make test-fast`
+pytestmark = pytest.mark.slow
+
 ALL_ARCHS = [a for a in ARCH_IDS]
 
 

@@ -29,6 +29,9 @@ from repro.serving.page_pool import PagePool
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, Status
 
+# jit-compile-heavy end-to-end module: deselected by `make test-fast`
+pytestmark = pytest.mark.slow
+
 PARITY_ARCHS = ["qwen3_0_6b", "granite_moe_1b_a400m", "recurrentgemma_9b"]
 
 

@@ -1,0 +1,170 @@
+"""Property-based hardening of core/pareto.py: frontier permutation-
+invariance, mutual non-domination, sweet-spot ceiling compliance, and
+incremental-insert == batch-recompute equivalence for the online
+frontier the serve-time router consults.
+
+Runs under hypothesis when installed; otherwise a seeded random-case
+generator drives the SAME property checks, so the invariants stay
+exercised in minimal environments."""
+import itertools
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+    given = settings = st = None
+
+from repro.core.pareto import (ConfigPoint, OnlineFrontier, dominates,
+                               pareto_frontier, sweet_spot)
+
+pytestmark = pytest.mark.fuzz
+
+OBJ3 = ("accuracy", "latency_s", "cost_usd")
+
+
+def _pts(raw):
+    return [ConfigPoint(f"p{i}", "m", "s", a, l, c)
+            for i, (a, l, c) in enumerate(raw)]
+
+
+def _random_raw(rng: np.random.Generator):
+    """Compact integer value domain: ties/duplicates are likely — the
+    interesting regime for dominance edge cases."""
+    n = int(rng.integers(1, 25))
+    return [tuple(float(v) for v in rng.integers(0, 6, size=3))
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# property checks (shared by hypothesis and the fallback driver)
+# ---------------------------------------------------------------------------
+
+def _check_permutation_invariant(raw, seed):
+    pts = _pts(raw)
+    base = {p.name for p in pareto_frontier(pts, OBJ3)}
+    perm = list(pts)
+    for _ in range(seed % 6):                   # a few rotations + reverse
+        perm = perm[1:] + perm[:1]
+    perm.reverse()
+    assert {p.name for p in pareto_frontier(perm, OBJ3)} == base
+
+
+def _check_mutually_nondominated(raw):
+    front = pareto_frontier(_pts(raw), OBJ3)
+    assert front, "frontier of a nonempty set is nonempty"
+    for a, b in itertools.permutations(front, 2):
+        assert not dominates(a, b)
+
+
+def _check_sweet_spot_ceilings(raw, max_lat, max_cost):
+    pts = _pts(raw)
+    best = sweet_spot(pts, max_lat, max_cost)
+    if best is None:
+        assert all((max_lat is not None and p.latency_s > max_lat)
+                   or (max_cost is not None and p.cost_usd > max_cost)
+                   for p in pts)
+    else:
+        assert max_lat is None or best.latency_s <= max_lat
+        assert max_cost is None or best.cost_usd <= max_cost
+        # optimality: no feasible point beats it on accuracy
+        for p in pts:
+            if ((max_lat is None or p.latency_s <= max_lat)
+                    and (max_cost is None or p.cost_usd <= max_cost)):
+                assert p.accuracy <= best.accuracy
+
+
+def _check_incremental_equals_batch(raw):
+    """OnlineFrontier after streaming inserts == pareto_frontier over the
+    whole batch (any insertion order), and its sweet_spot under any
+    ceiling matches the batch sweet_spot over ALL points."""
+    pts = _pts(raw)
+    batch = sorted(p.name for p in pareto_frontier(pts, OBJ3))
+    half = len(pts) // 2
+    for order in (pts, pts[::-1], pts[half:] + pts[:half]):
+        fr = OnlineFrontier(OBJ3)
+        for p in order:
+            fr.insert(p)
+        assert sorted(p.name for p in fr.points) == batch
+    fr = OnlineFrontier(OBJ3)
+    for p in pts:
+        fr.insert(p)
+    for ceil in (None, 2.0, 4.0):
+        a = fr.sweet_spot(max_latency_s=ceil)
+        b = sweet_spot(pts, max_latency_s=ceil)
+        assert (a is None) == (b is None)
+        if a is not None:
+            # tie-break may land on different equal-valued points; the
+            # selected (accuracy, cost, latency) triple must agree
+            assert (a.accuracy, a.cost_usd, a.latency_s) == \
+                (b.accuracy, b.cost_usd, b.latency_s)
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    coord = st.integers(0, 5).map(float)
+    points_strategy = st.lists(st.tuples(coord, coord, coord),
+                               min_size=1, max_size=24)
+
+    @settings(max_examples=60, deadline=None)
+    @given(raw=points_strategy, seed=st.integers(0, 11))
+    def test_frontier_permutation_invariant(raw, seed):
+        _check_permutation_invariant(raw, seed)
+
+    @settings(max_examples=60, deadline=None)
+    @given(raw=points_strategy)
+    def test_frontier_mutually_nondominated(raw):
+        _check_mutually_nondominated(raw)
+
+    @settings(max_examples=60, deadline=None)
+    @given(raw=points_strategy,
+           max_lat=st.one_of(st.none(), coord),
+           max_cost=st.one_of(st.none(), coord))
+    def test_sweet_spot_never_violates_ceilings(raw, max_lat, max_cost):
+        _check_sweet_spot_ceilings(raw, max_lat, max_cost)
+
+    @settings(max_examples=60, deadline=None)
+    @given(raw=points_strategy)
+    def test_incremental_insert_equals_batch(raw):
+        _check_incremental_equals_batch(raw)
+else:
+    def test_frontier_permutation_invariant():
+        rng = np.random.default_rng(0)
+        for i in range(60):
+            _check_permutation_invariant(_random_raw(rng), i)
+
+    def test_frontier_mutually_nondominated():
+        rng = np.random.default_rng(1)
+        for _ in range(60):
+            _check_mutually_nondominated(_random_raw(rng))
+
+    def test_sweet_spot_never_violates_ceilings():
+        rng = np.random.default_rng(2)
+        for _ in range(60):
+            ceils = [None, float(rng.integers(0, 6))]
+            _check_sweet_spot_ceilings(
+                _random_raw(rng),
+                ceils[int(rng.integers(2))], ceils[int(rng.integers(2))])
+
+    def test_incremental_insert_equals_batch():
+        rng = np.random.default_rng(3)
+        for _ in range(60):
+            _check_incremental_equals_batch(_random_raw(rng))
+
+
+def test_upsert_replaces_by_name():
+    fr = OnlineFrontier(OBJ3)
+    fr.insert(ConfigPoint("a", "m", "s", 50.0, 1.0, 1.0))
+    fr.insert(ConfigPoint("b", "m", "s", 90.0, 5.0, 5.0))
+    # refreshing "a" with a better running mean evicts nothing else
+    assert fr.upsert(ConfigPoint("a", "m", "s", 60.0, 1.0, 1.0))
+    assert {p.name for p in fr.points} == {"a", "b"}
+    # a refreshed mean that is now dominated drops the point
+    assert not fr.upsert(ConfigPoint("b", "m", "s", 40.0, 5.0, 5.0))
+    assert {p.name for p in fr.points} == {"a"}

@@ -12,6 +12,9 @@ import pytest
 
 from repro.models.registry import build_model, get_smoke_config, model_inputs
 
+# jit-compile-heavy end-to-end module: deselected by `make test-fast`
+pytestmark = pytest.mark.slow
+
 EXTEND_ARCHS = ["qwen3_0_6b", "yi_6b", "granite_moe_1b_a400m",
                 "falcon_mamba_7b", "recurrentgemma_9b", "whisper_tiny",
                 "reflect_demo_100m"]

@@ -31,6 +31,9 @@ from repro.serving.engine import Engine
 from repro.serving.request import Request, Status
 from repro.train.quick_fit import quick_fit_ramp, ramp_prompt
 
+# jit-compile-heavy end-to-end module: deselected by `make test-fast`
+pytestmark = pytest.mark.slow
+
 PARITY_ARCHS = ["qwen3_0_6b", "granite_moe_1b_a400m", "recurrentgemma_9b"]
 
 

@@ -21,6 +21,9 @@ from repro.serving.page_pool import PagePool
 from repro.serving.request import Request, Status
 from repro.serving.speculator import NGramSpeculator, draft_corpus
 
+# jit-compile-heavy end-to-end module: deselected by `make test-fast`
+pytestmark = pytest.mark.slow
+
 
 def _setup(arch="qwen3_0_6b"):
     cfg = get_smoke_config(arch).replace(dtype="float32")

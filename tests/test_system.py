@@ -16,6 +16,9 @@ from repro.models.registry import build_model, get_smoke_config
 from repro.serving.engine import Engine
 from repro.serving.request import Request
 
+# jit-compile-heavy end-to-end module: deselected by `make test-fast`
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def engine_setup():

@@ -15,6 +15,9 @@ from repro.train import checkpoint as ckpt
 from repro.train import optimizer as opt
 from repro.train.loop import chunked_xent, make_loss_fn, make_train_step, softmax_xent
 
+# jit-compile-heavy end-to-end module: deselected by `make test-fast`
+pytestmark = pytest.mark.slow
+
 
 def _setup(arch="reflect_demo_100m", **tkw):
     cfg = get_smoke_config(arch).replace(dtype="float32")
