@@ -39,6 +39,7 @@ MODULES = [
     "benchmarks.kernels_micro",
     "benchmarks.speculative",
     "benchmarks.adaptive_router",
+    "benchmarks.cascade",
 ]
 
 OUT_DIR = os.path.dirname(os.path.abspath(__file__))

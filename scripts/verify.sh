@@ -33,4 +33,12 @@ python benchmarks/speculative.py --smoke
 echo "== smoke: benchmarks/adaptive_router.py --smoke (online routing) =="
 python benchmarks/adaptive_router.py --smoke
 
+# Cross-model cascade smoke: small->large escalation on the same mixed
+# workload must match-or-beat BOTH fixed tiers' accuracy at <= 0.8x the
+# large tier's cost, with zero SLO-ceiling violations (asserted inside
+# the module; simulation only — the real two-engine handoff runs under
+# `make bench`).
+echo "== smoke: benchmarks/cascade.py --smoke (cascade routing) =="
+python benchmarks/cascade.py --smoke
+
 echo "verify: OK"

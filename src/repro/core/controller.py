@@ -21,6 +21,15 @@ core/accounting.py's models.  Budget escalation is CONDITIONAL, following
 only a request that is stably wrong — and whose ceilings can fund the
 bigger round — gets a higher thinking tier.
 
+With ``cascade=True`` the same stall evidence can instead trigger an
+``escalate_model`` hop up the model ladder (small -> large), priced on
+the large tier's models with a cold cache; which model answers moves the
+quality/cost frontier far more than how long one model thinks, so the
+cascade hop is checked BEFORE the thinking-budget hop.  Per-tier pricing
+lives in ``tier_pricing`` and the online frontier keys its points by
+(strategy, model tier) so warm starts can route a fresh request straight
+to the tier whose sweet spot fits its ceilings (``plan_start``).
+
 Completed requests feed an online per-domain Pareto frontier
 (core/pareto.py::OnlineFrontier) that warm-starts future routing: once a
 domain has enough observations, a frontier whose sweet spot is
@@ -51,6 +60,11 @@ from repro.serving.request import BudgetTier, TokenUsage
 # escalation ladder: each stalled escalation moves one tier up
 _NEXT_TIER = {BudgetTier.NONE: BudgetTier.LOW, BudgetTier.LOW: BudgetTier.HIGH}
 
+# model-cascade ladder (small -> large).  A single hop by construction:
+# "large" has no successor, so ``escalate_model`` can fire at most once
+# per request (pinned by tests/test_engine_fuzz.py).
+_NEXT_MODEL = {"small": "large"}
+
 
 @dataclass(frozen=True)
 class SLO:
@@ -74,12 +88,13 @@ class RoundSignals:
     vote_frac: float = 0.0           # self-consistency agreement across rounds
     stalls: int = 0                  # consecutive stable-but-INCORRECT rounds
     tier: BudgetTier = BudgetTier.NONE   # thinking tier the round ran at
+    model_tier: str = "small"        # cascade tier the round ran on
 
 
 @dataclass
 class Decision:
     """One routing decision, recorded per completed round."""
-    action: str                      # "stop" | "reflect" | "escalate"
+    action: str            # "stop" | "reflect" | "escalate" | "escalate_model"
     reason: str
     round_idx: int
     tier: str                        # tier for the NEXT round (reflect/escalate)
@@ -87,10 +102,12 @@ class Decision:
     latency_s: float
     pred_cost_usd: float             # predicted marginal cost of the next round
     pred_latency_s: float
+    model_tier: str = "small"        # cascade tier for the NEXT round
 
     def key(self) -> Tuple:
         """Compact hashable form for trace-equality assertions."""
         return (self.action, self.reason, self.round_idx, self.tier,
+                self.model_tier,
                 round(self.cost_usd, 10), round(self.latency_s, 7),
                 round(self.pred_cost_usd, 10), round(self.pred_latency_s, 7))
 
@@ -161,11 +178,14 @@ class ControllerConfig:
     vote_stop_frac: float = 0.67
     escalate: bool = True            # allow conditional budget escalation
     escalate_after_stalls: int = 2   # stable-but-INCORRECT rounds before escalating
+    cascade: bool = False            # allow small->large model escalation
+    cascade_after_stalls: int = 2    # stalled rounds before a model hop
     warm_start: bool = True          # consult the online frontier for planning
     min_obs: int = 8                 # per-(domain,strategy) observations needed
     # simulated-backend knobs (core/reflection.py::route_simulated):
     sim_judge_accuracy: float = 0.9  # P(simulated judge verdict is truthful)
     escalation_fix_p: float = 0.35   # P(escalated round fixes a wrong answer)
+    cascade_fix_p: float = 0.65      # P(a large-tier round fixes a wrong answer)
     # mean thinking tokens an escalated round consumes per tier —
     # snapshotted from quality_sim.THINK_CONSUMED at config construction
     # so the default can never drift from the simulator's calibration
@@ -178,14 +198,24 @@ class SweetSpotController:
     """Serve-time stop/reflect/escalate policy + online per-domain frontier."""
 
     def __init__(self, cost_model: CostModel, latency_model: LatencyModel,
-                 config: Optional[ControllerConfig] = None):
+                 config: Optional[ControllerConfig] = None,
+                 tier_pricing: Optional[Dict[str, Tuple[CostModel,
+                                                        LatencyModel]]] = None):
         self.cm = cost_model
         self.lm = latency_model
         self.cfg = config or ControllerConfig()
+        # cascade pricing: model tier -> (CostModel, LatencyModel).  The
+        # "small" tier defaults to the single-tier models above, so a
+        # cascade-off controller prices exactly as before.
+        self.tier_pricing = dict(tier_pricing or {})
+        self.tier_pricing.setdefault("small", (cost_model, latency_model))
         self.frontiers: Dict[str, OnlineFrontier] = {}
-        # (domain, strategy) -> [n, sum_quality, sum_cost, sum_latency]
-        self._stats: Dict[Tuple[str, str], List[float]] = {}
+        # (domain, model_tier, strategy) -> [n, sum_q, sum_cost, sum_lat]
+        self._stats: Dict[Tuple[str, str, str], List[float]] = {}
         self._domain_obs: Dict[str, int] = {}
+
+    def _models(self, model_tier: str) -> Tuple[CostModel, LatencyModel]:
+        return self.tier_pricing.get(model_tier, (self.cm, self.lm))
 
     # ---------------- warm start ------------------------------------------
 
@@ -215,27 +245,64 @@ class SweetSpotController:
             return R
         return 0 if _strategy_rounds(best.strategy) == 0 else R
 
+    def plan_start(self, domain: str,
+                   slo: Optional[SLO] = None) -> Tuple[int, str]:
+        """(reflection ceiling, starting model tier) for a fresh request.
+
+        The tier choice mirrors ``plan_rounds``' coarse philosophy: cold
+        domains (and cascade-off controllers) always start small — the
+        cascade's whole premise is that most requests never need the
+        large model — and a warm domain starts large only when the
+        frontier's sweet spot under this request's ceilings is a
+        large-tier point, i.e. observed small-tier strategies cannot
+        match it within budget even after escalations."""
+        rounds = self.plan_rounds(domain, slo)
+        if not (self.cfg.cascade and self.cfg.warm_start):
+            return rounds, "small"
+        R = self.cfg.max_rounds
+        if self._domain_obs.get(domain, 0) < self.cfg.min_obs * (R + 1):
+            return rounds, "small"
+        fr = self.frontiers.get(domain)
+        pts = [p for p in fr.points
+               if p.meta.get("n", 0) >= self.cfg.min_obs] if fr else []
+        best = sweet_spot(pts,
+                          slo.max_latency_s if slo else None,
+                          slo.max_cost_usd if slo else None)
+        if best is None or best.model not in self.tier_pricing:
+            return rounds, "small"
+        return rounds, best.model
+
     # ---------------- per-round policy ------------------------------------
 
     def decide(self, signals: RoundSignals, slo: Optional[SLO],
                spend: TokenUsage, next_round: TokenUsage,
-               planned_rounds: Optional[int] = None) -> Decision:
+               planned_rounds: Optional[int] = None, *,
+               spent_cost_usd: Optional[float] = None,
+               spent_latency_s: Optional[float] = None) -> Decision:
         """One stop/reflect/escalate decision after a completed round.
 
         ``spend`` is the request's cumulative usage; ``next_round`` the
-        estimated marginal usage of one more (non-escalated) round.  The
-        controller never STARTS a round it cannot fund: reflect requires
-        spend + next_round inside the ceilings, escalate additionally
-        prices the tier's mean thinking tokens."""
-        cost = self.cm.cost(spend)
-        lat = self.lm.latency(spend)
-        pred_c = self.cm.cost(next_round)
-        pred_l = self.lm.latency(next_round)
+        estimated marginal usage of one more (non-escalated) round, both
+        priced at ``signals.model_tier``'s models.  A cascade caller
+        whose request already spans two tiers passes the exact priced
+        totals via ``spent_cost_usd``/``spent_latency_s`` instead (a
+        single TokenUsage cannot carry two prices); single-tier callers
+        omit them and get the PR-5 pricing unchanged.  The controller
+        never STARTS a round it cannot fund: reflect requires spend +
+        next_round inside the ceilings, escalate additionally prices the
+        tier's mean thinking tokens, and escalate_model prices the next
+        round on the LARGE tier's models with a cold cache."""
+        cm, lm = self._models(signals.model_tier)
+        cost = cm.cost(spend) if spent_cost_usd is None else spent_cost_usd
+        lat = lm.latency(spend) if spent_latency_s is None else spent_latency_s
+        pred_c = cm.cost(next_round)
+        pred_l = lm.latency(next_round)
         cfg = self.cfg
 
         def mk(action: str, reason: str, tier: BudgetTier) -> Decision:
             return Decision(action, reason, signals.round_idx, tier.value,
-                            cost, lat, pred_c, pred_l)
+                            cost, lat, pred_c, pred_l,
+                            model_tier=signals.model_tier)
 
         cap = cfg.max_rounds if planned_rounds is None \
             else min(planned_rounds, cfg.max_rounds)
@@ -266,6 +333,32 @@ class SweetSpotController:
         if verdict is not False and consensus and signals.round_idx >= 1:
             return mk("stop", "consensus", signals.tier)
 
+        if (cfg.cascade and verdict is False and unchanged
+                and signals.stalls >= cfg.cascade_after_stalls
+                and signals.model_tier in _NEXT_MODEL
+                and _NEXT_MODEL[signals.model_tier] in self.tier_pricing):
+            # stably wrong on the small model: more of the same thinking
+            # is unlikely to help ("Increasing the Thinking Budget is Not
+            # All You Need") — hand the request to the large tier if the
+            # ceilings can fund it.  The large engine starts with a COLD
+            # cache, so every token the small tier would have re-read
+            # from cache is priced as fresh input (and a fresh write).
+            nxt_model = _NEXT_MODEL[signals.model_tier]
+            ncm, nlm = self.tier_pricing[nxt_model]
+            esc = TokenUsage(
+                input_tokens=(next_round.input_tokens
+                              + next_round.cache_read_tokens),
+                cache_read_tokens=0,
+                cache_write_tokens=(next_round.cache_write_tokens
+                                    + next_round.cache_read_tokens),
+                output_tokens=next_round.output_tokens)
+            esc_c, esc_l = ncm.cost(esc), nlm.latency(esc)
+            if slo is None or slo.admits(cost + esc_c, lat + esc_l):
+                return Decision("escalate_model", "stalled-wrong-model",
+                                signals.round_idx, signals.tier.value,
+                                cost, lat, esc_c, esc_l,
+                                model_tier=nxt_model)
+
         if (cfg.escalate and verdict is False and unchanged
                 and signals.stalls >= cfg.escalate_after_stalls
                 and signals.tier in _NEXT_TIER):
@@ -281,32 +374,47 @@ class SweetSpotController:
                              cache_read_tokens=next_round.cache_read_tokens,
                              cache_write_tokens=next_round.cache_write_tokens,
                              output_tokens=next_round.output_tokens + think)
-            esc_c, esc_l = self.cm.cost(esc), self.lm.latency(esc)
+            esc_c, esc_l = cm.cost(esc), lm.latency(esc)
             if slo is None or slo.admits(cost + esc_c, lat + esc_l):
                 return Decision("escalate", "stalled-incorrect",
                                 signals.round_idx, nxt.value, cost, lat,
-                                esc_c, esc_l)
+                                esc_c, esc_l,
+                                model_tier=signals.model_tier)
         return mk("reflect", "continue", signals.tier)
 
     # ---------------- online frontier -------------------------------------
 
     def observe(self, domain: str, rounds_run: int, tier: BudgetTier,
-                quality: float, usage: TokenUsage) -> None:
+                quality: float, usage: TokenUsage,
+                model_tier: str = "small", *,
+                cost_usd: Optional[float] = None,
+                latency_s: Optional[float] = None) -> None:
         """Fold a completed request into the domain's running stats and
-        refresh its strategy point on the online frontier."""
+        refresh its strategy point on the online frontier.
+
+        The frontier point is keyed by (domain, strategy) in ``name`` and
+        by ``model_tier`` in ``ConfigPoint.model`` — upsert identity is
+        (name, model), so small- and large-tier observations of the same
+        strategy keep separate running means.  The tier stays OUT of the
+        strategy name: ``plan_rounds`` parses rounds via
+        ``_strategy_rounds`` and a tier prefix would break it.  A request
+        that escalated mid-flight spans two price books; its caller
+        passes the exact priced totals via ``cost_usd``/``latency_s``."""
         name = f"reflect{rounds_run}"
         if tier is not BudgetTier.NONE:
             name += f"+think_{tier.value}"
-        st = self._stats.setdefault((domain, name), [0, 0.0, 0.0, 0.0])
+        cm, lm = self._models(model_tier)
+        st = self._stats.setdefault((domain, model_tier, name),
+                                    [0, 0.0, 0.0, 0.0])
         st[0] += 1
         st[1] += quality
-        st[2] += self.cm.cost(usage)
-        st[3] += self.lm.latency(usage)
+        st[2] += cm.cost(usage) if cost_usd is None else cost_usd
+        st[3] += lm.latency(usage) if latency_s is None else latency_s
         self._domain_obs[domain] = self._domain_obs.get(domain, 0) + 1
         fr = self.frontiers.setdefault(domain, OnlineFrontier())
         n = st[0]
         fr.upsert(ConfigPoint(
-            name=f"{domain}@{name}", model="online", strategy=name,
+            name=f"{domain}@{name}", model=model_tier, strategy=name,
             accuracy=st[1] / n, latency_s=st[3] / n, cost_usd=st[2] / n,
             meta={"n": n}))
 

@@ -89,10 +89,15 @@ class OnlineFrontier:
     the frontier (domination is transitive), so the incremental update
     loses nothing relative to a batch recompute.
 
-    ``upsert`` additionally replaces any same-``name`` point first; the
+    ``upsert`` additionally replaces any same-identity point first; the
     controller uses it to refresh a strategy's running-mean point as new
     observations arrive (after an upsert the batch-equivalence invariant
     applies to the surviving points only, since old means are retracted).
+    Identity is ``(name, model)``, NOT name alone: the cascade controller
+    publishes one running-mean point per (domain, strategy) AND model
+    tier, and a small-tier point must never retract the large-tier point
+    that happens to share its strategy name (pinned by
+    tests/test_pareto_properties.py).
     """
 
     def __init__(self, objectives: Sequence[str] = ("accuracy", "latency_s",
@@ -126,8 +131,12 @@ class OnlineFrontier:
         return True
 
     def upsert(self, p: ConfigPoint) -> bool:
-        """Retract any same-name point, then insert (running-mean refresh)."""
-        self._points = [q for q in self._points if q.name != p.name]
+        """Retract any same-identity point, then insert (running-mean
+        refresh).  Identity is ``(name, model)``: points that share a
+        strategy name but belong to different model tiers coexist — an
+        equal-cost refresh of one tier must not clobber the other."""
+        self._points = [q for q in self._points
+                        if (q.name, q.model) != (p.name, p.model)]
         return self.insert(p)
 
     def sweet_spot(self, max_latency_s: Optional[float] = None,

@@ -99,14 +99,16 @@ class EngineBackend:
     def _request(self, conversation: str, conversation_id: str,
                  budget: BudgetTier,
                  ceilings: Tuple[Optional[float], Optional[float]]
-                 = (None, None)) -> Request:
+                 = (None, None),
+                 external_draft: Optional[List[int]] = None) -> Request:
         return Request(prompt=self.tok.encode(conversation),
                        max_new_tokens=self.max_new_tokens,
                        eos_id=self.tok.eos_id, budget=budget,
                        conversation_id=conversation_id,
                        max_cost_usd=ceilings[0], max_latency_s=ceilings[1],
                        spec_context=list(
-                           self._prior_drafts.get(conversation_id, [])))
+                           self._prior_drafts.get(conversation_id, [])),
+                       external_draft=external_draft)
 
     def _decode_output(self, req: Request) -> str:
         out = req.output
@@ -123,24 +125,31 @@ class EngineBackend:
     def complete_routed(self, conversation: str, conversation_id: str,
                         budget: BudgetTier,
                         ceilings: Tuple[Optional[float], Optional[float]]
-                        = (None, None)) -> Tuple[str, TokenUsage, Request]:
+                        = (None, None),
+                        external_draft: Optional[List[int]] = None
+                        ) -> Tuple[str, TokenUsage, Request]:
         """One round with per-request SLO ceilings attached; returns the
         Request too so the routed loop can read stop_reason (the engine's
         SLO admission finalizes unfundable rounds) and append its
-        decisions to the request's trace."""
+        decisions to the request's trace.  ``external_draft`` carries the
+        cascade's cross-model handoff: the other tier's committed tokens,
+        drafted positionally by this engine's verify step."""
         out = self.complete_many([(conversation, conversation_id)], budget,
-                                 ceilings=ceilings)
+                                 ceilings=ceilings,
+                                 external_draft=external_draft)
         text, usage = out[0]
         return text, usage, self.last_requests[0]
 
     def complete_many(self, conversations: List[Tuple[str, str]],
                       budget: BudgetTier,
                       ceilings: Tuple[Optional[float], Optional[float]]
-                      = (None, None)) -> List[Tuple[str, TokenUsage]]:
+                      = (None, None),
+                      external_draft: Optional[List[int]] = None
+                      ) -> List[Tuple[str, TokenUsage]]:
         """Submit a batch of (conversation, conversation_id) and poll the
         engine until all are done — their prefill chunks and decode steps
         interleave inside the engine's mixed steps."""
-        reqs = [self._request(c, cid, budget, ceilings)
+        reqs = [self._request(c, cid, budget, ceilings, external_draft)
                 for c, cid in conversations]
         self.last_requests = reqs
         for r in reqs:
@@ -208,6 +217,52 @@ class SimulatedBackend:
         return usage
 
 
+class CascadeBackend:
+    """Two EngineBackends — distinct models, distinct engines, distinct
+    prefix caches — behind one routed-loop interface.
+
+    The routed loop starts every request on the ``small`` tier and, when
+    the controller emits ``escalate_model``, replays the conversation on
+    the ``large`` tier from a COLD cache (nothing of the small engine's
+    KV transfers), feeding the small tier's committed answer to the
+    large engine as ``Request.external_draft``.  That turns PR 4's
+    self-speculative verify machinery into true two-model speculative
+    decoding: the large engine scores the small model's tokens in one
+    batched verify lane per token, commits the longest accepted prefix,
+    rolls the rest back (PagePool.truncate_tail) and bills only what it
+    accepted — greedy output stays bit-identical to the large model
+    decoding alone (tests/test_cascade.py)."""
+
+    def __init__(self, small: EngineBackend, large: EngineBackend):
+        self.tiers: Dict[str, EngineBackend] = {"small": small,
+                                                "large": large}
+
+    @property
+    def small(self) -> EngineBackend:
+        return self.tiers["small"]
+
+    @property
+    def large(self) -> EngineBackend:
+        return self.tiers["large"]
+
+
+class SimulatedCascade:
+    """SimulatedBackend pair mirroring CascadeBackend for the offline
+    path: one token/cache simulator per tier (small model, large model),
+    same domain, independent prompt caches — escalating replays the
+    conversation as ALL-FRESH input on the large simulator, exactly the
+    cold-cache usage the controller's ``escalate_model`` pricing assumed,
+    which is what keeps simulated SLO ceilings hard across a hop."""
+
+    def __init__(self, small: SimulatedBackend, large: SimulatedBackend):
+        assert small.domain == large.domain, "cascade tiers must share domain"
+        self.tiers: Dict[str, SimulatedBackend] = {"small": small,
+                                                   "large": large}
+        self.domain = small.domain
+        self.rng = small.rng             # cid source (parity with 1-tier)
+        self.profile = small.profile
+
+
 class ReflectionController:
     """Generic reflect-and-revise loop over either backend.
 
@@ -230,6 +285,8 @@ class ReflectionController:
                  slo: Optional[SLO] = None) -> ReflectionResult:
         if self.router is not None:
             return self._run_task_routed(backend, task, slo)
+        if isinstance(backend, CascadeBackend):
+            backend = backend.small      # fixed loop has no tier policy
         convo = task.prompt()
         cid = f"task-{id(task)}"
         result = ReflectionResult(rounds=[])
@@ -259,31 +316,53 @@ class ReflectionController:
                 BudgetTier.HIGH: scfg.max_think_tokens_high}
         return min(backend.max_new_tokens, caps[tier])
 
-    def _remaining(self, slo: Optional[SLO], usage: TokenUsage
+    def _remaining(self, slo: Optional[SLO], usage: TokenUsage,
+                   spent: Optional[Tuple[float, float]] = None
                    ) -> Tuple[Optional[float], Optional[float]]:
         """Ceilings minus spend so far — the per-round Request ceilings
-        the engine's SLO admission checks against."""
+        the engine's SLO admission checks against.  Dollars and seconds
+        are model-agnostic, so a cascade caller whose spend spans two
+        price books passes the exact priced totals via ``spent``;
+        single-tier callers price the cumulative usage as before."""
         if slo is None:
             return (None, None)
         router = self.router
+        c, lt = spent if spent is not None else (router.cm.cost(usage),
+                                                 router.lm.latency(usage))
         rc = (None if slo.max_cost_usd is None
-              else max(0.0, slo.max_cost_usd - router.cm.cost(usage)))
+              else max(0.0, slo.max_cost_usd - c))
         rl = (None if slo.max_latency_s is None
-              else max(0.0, slo.max_latency_s - router.lm.latency(usage)))
+              else max(0.0, slo.max_latency_s - lt))
         return (rc, rl)
 
-    def _run_task_routed(self, backend: EngineBackend, task,
+    def _run_task_routed(self, backend, task,
                          slo: Optional[SLO]) -> ReflectionResult:
         router = self.router
+        # cascade dimension: a CascadeBackend plus cfg.cascade activates
+        # model-tier routing; everything else runs the single-tier loop
+        # byte-for-byte (pinned by tests/test_engine_fuzz.py).  A
+        # CascadeBackend under a cascade-off config just serves the
+        # small tier.
+        if isinstance(backend, CascadeBackend):
+            tiers = backend.tiers
+            cascade = router.cfg.cascade
+        else:
+            tiers = {"small": backend}
+            cascade = False
         # the engine backstop is optional (slo_price_model=None leaves
         # enforcement to the controller alone), but when BOTH sides
         # price ceilings they must price them identically — remaining
-        # dollars computed under one model are meaningless to the other
-        eng_cm = getattr(backend.engine, "cost_model", None)
-        if slo is not None and eng_cm is not None:
-            assert (eng_cm == router.cm
-                    and backend.engine.latency_model == router.lm), \
-                "engine slo_price_model disagrees with the router's models"
+        # dollars computed under one model are meaningless to the other.
+        # Each tier's engine is checked against that TIER's price book.
+        if slo is not None:
+            for mt, b in tiers.items():
+                eng_cm = getattr(b.engine, "cost_model", None)
+                if eng_cm is not None:
+                    rcm, rlm = router._models(mt)
+                    assert (eng_cm == rcm
+                            and b.engine.latency_model == rlm), \
+                        f"engine slo_price_model disagrees with the " \
+                        f"router's {mt}-tier models"
         convo = task.prompt()
         cid = f"task-{id(task)}"
         domain = getattr(task, "domain", "default")
@@ -294,14 +373,33 @@ class ReflectionController:
         # engine SLO refusal must not tag the request with a thinking
         # tier it never paid for
         tier = next_tier = self.strategy.budget
-        planned = router.plan_rounds(domain, slo)
+        if cascade:
+            planned, model_tier = router.plan_start(domain, slo)
+        else:
+            planned = router.plan_rounds(domain, slo)
+            model_tier = "small"
+        bk = tiers[model_tier]
+        # exact priced spend across tiers: a request that escalates spans
+        # two price books, so cumulative TokenUsage alone cannot be
+        # priced after the hop — the floats are the source of truth for
+        # cascade SLO math (single-tier paths keep pricing usage
+        # directly, preserving PR-5 float-for-float parity)
+        spent_c = spent_l = 0.0
+        # cross-model handoff: the small tier's committed tokens become
+        # the large tier's draft for ONE round (the first escalated one)
+        pending_draft: Optional[List[int]] = None
         responses: List[str] = []
         prev_response: Optional[str] = None
         stalls = 0
         idx = 0
         while True:
-            response, usage, req = backend.complete_routed(
-                convo, cid, next_tier, self._remaining(slo, result.usage))
+            response, usage, req = bk.complete_routed(
+                convo, cid, next_tier,
+                self._remaining(slo, result.usage,
+                                (spent_c, spent_l) if cascade else None),
+                external_draft=pending_draft)
+            pending_draft = None
+            cm_t, lm_t = router._models(model_tier)
             if req.stop_reason == "slo":
                 # the engine refused to fund the round: the previous
                 # answer stands (a refused round 0 records an empty one,
@@ -309,13 +407,16 @@ class ReflectionController:
                 # actually ran).  The terminal decision lands in
                 # result.trace exactly like the simulated path's refusal
                 result.usage += usage
+                spent_c += cm_t.cost(usage)
+                spent_l += lm_t.latency(usage)
                 rec = req.decision_trace[-1] if req.decision_trace else {}
                 result.trace.append(Decision(
                     "stop", "slo", idx, next_tier.value,
-                    router.cm.cost(result.usage),
-                    router.lm.latency(result.usage),
+                    spent_c if cascade else router.cm.cost(result.usage),
+                    spent_l if cascade else router.lm.latency(result.usage),
                     rec.get("pred_cost_usd", 0.0),
-                    rec.get("pred_latency_s", 0.0)))
+                    rec.get("pred_latency_s", 0.0),
+                    model_tier=model_tier))
                 if idx == 0:
                     result.rounds.append(RoundRecord(response, usage,
                                                      correct=False))
@@ -326,6 +427,8 @@ class ReflectionController:
                               correct=bool(task.verify(response)))
             result.rounds.append(rec)
             result.usage += usage
+            spent_c += cm_t.cost(usage)
+            spent_l += lm_t.latency(usage)
             responses.append(response)
             fb = self.feedback.feedback(task, response)
             delta = answer_delta(prev_response, response)
@@ -339,7 +442,7 @@ class ReflectionController:
                 round_idx=idx, answer_delta=delta, verdict=verdict,
                 vote_frac=vote_agreement([extract_answer(r)
                                           for r in responses]),
-                stalls=stalls, tier=tier)
+                stalls=stalls, tier=tier, model_tier=model_tier)
             # exact-shape next-round estimate: tokenize the conversation
             # the next round WOULD submit; the just-published snapshot
             # makes everything up to this round's end a cache hit, the
@@ -350,18 +453,32 @@ class ReflectionController:
             next_convo = (convo + " " + response + " "
                           + REFLECT_TEMPLATE.format(feedback=fb,
                                                     question=task.prompt()))
-            ntok = len(backend.tok.encode(next_convo))
+            ntok = len(bk.tok.encode(next_convo))
             cached_est = min(len(req.prompt) + len(req.output), ntok - 1)
             pred = TokenUsage(input_tokens=ntok - cached_est,
                               cache_read_tokens=cached_est,
                               cache_write_tokens=ntok - cached_est,
-                              output_tokens=backend.max_new_tokens)
-            decision = router.decide(signals, slo, result.usage, pred,
-                                     planned_rounds=planned)
+                              output_tokens=bk.max_new_tokens)
+            if cascade:
+                decision = router.decide(signals, slo, result.usage, pred,
+                                         planned_rounds=planned,
+                                         spent_cost_usd=spent_c,
+                                         spent_latency_s=spent_l)
+            else:
+                decision = router.decide(signals, slo, result.usage, pred,
+                                         planned_rounds=planned)
             result.trace.append(decision)
             req.decision_trace.append(decision.key())
             if decision.action == "stop":
                 break
+            if decision.action == "escalate_model":
+                # hand the request to the large tier: cold cache there
+                # (decide() priced the next round as all-fresh input),
+                # and this round's committed tokens ride along as the
+                # large engine's speculative draft
+                model_tier = decision.model_tier
+                bk = tiers[model_tier]
+                pending_draft = list(req.output)
             if decision.action == "escalate":
                 # the engine's budget tiers CAP decode steps (they never
                 # add capacity) — apply an escalation only when the new
@@ -370,14 +487,20 @@ class ReflectionController:
                 # otherwise run a plain round at the current tier so the
                 # frontier never records a tier that changed nothing
                 cand = BudgetTier(decision.tier)
-                if self._engine_cap(backend, cand) > \
-                        self._engine_cap(backend, tier):
+                if self._engine_cap(bk, cand) > \
+                        self._engine_cap(bk, tier):
                     next_tier = cand
             prev_response = response
             convo = next_convo
             idx += 1
-        router.observe(domain, result.rounds_run, tier,
-                       100.0 * bool(result.final.correct), result.usage)
+        if cascade:
+            router.observe(domain, result.rounds_run, tier,
+                           100.0 * bool(result.final.correct), result.usage,
+                           model_tier=model_tier,
+                           cost_usd=spent_c, latency_s=spent_l)
+        else:
+            router.observe(domain, result.rounds_run, tier,
+                           100.0 * bool(result.final.correct), result.usage)
         return result
 
     # ---------------- simulated path (paper reproduction) ----------------
@@ -385,6 +508,8 @@ class ReflectionController:
     def run_simulated(self, sim: SimulatedBackend, correct_by_round,
                       think_tokens: int = 0) -> ReflectionResult:
         """correct_by_round: bool per round from quality_sim trajectories."""
+        if isinstance(sim, SimulatedCascade):
+            sim = sim.tiers["small"]     # fixed loop has no tier policy
         prof = sim.profile
         convo_tokens = prof["prompt"]
         cid = f"sim-{sim.rng.integers(1 << 62)}"
@@ -403,10 +528,10 @@ class ReflectionController:
             result.usage += usage
         return result
 
-    def route_simulated(self, sim: SimulatedBackend, correct_by_round,
+    def route_simulated(self, sim, correct_by_round,
                         slo: Optional[SLO] = None,
-                        rng: Optional[np.random.Generator] = None
-                        ) -> ReflectionResult:
+                        rng: Optional[np.random.Generator] = None,
+                        large_correct_by_round=None) -> ReflectionResult:
         """Adaptive counterpart of ``run_simulated`` (requires a router):
         the same decide() policy as the engine path, driven by simulated
         signals.
@@ -430,10 +555,26 @@ class ReflectionController:
         cannot fund even the first answer refuses the request up front —
         an empty zero-usage round with a "slo" stop decision and no
         frontier observation, mirroring the engine backend's admission
-        finalize."""
+        finalize.
+
+        Cascade: with a ``SimulatedCascade`` and ``cfg.cascade`` on, the
+        loop grows the model-tier dimension.  An ``escalate_model``
+        decision replays the conversation all-fresh on the large
+        simulator (cold cache — the exact usage the decision priced) and
+        every large-tier round fixes a still-wrong answer w.p.
+        ``cfg.cascade_fix_p`` (fixes retained).  A warm start that
+        routes round 0 straight to the large tier follows
+        ``large_correct_by_round`` when provided (the large model's own
+        quality trajectory), else falls back to ``correct_by_round``."""
         router = self.router
         assert router is not None, "route_simulated requires a router"
         cfg = router.cfg
+        if isinstance(sim, SimulatedCascade):
+            tiers = sim.tiers
+            cascade = cfg.cascade
+        else:
+            tiers = {"small": sim}
+            cascade = False
         rng = np.random.default_rng(0) if rng is None else rng
         prof = sim.profile
         convo_tokens = prof["prompt"]
@@ -441,24 +582,38 @@ class ReflectionController:
         domain = sim.domain
         result = ReflectionResult(rounds=[])
         tier = self.strategy.budget
-        planned = router.plan_rounds(domain, slo)
+        if cascade:
+            planned, model_tier = router.plan_start(domain, slo)
+        else:
+            planned = router.plan_rounds(domain, slo)
+            model_tier = "small"
+        sim_t = tiers[model_tier]
+        started_large = model_tier == "large"
+        # warm-started large requests follow the large model's own
+        # trajectory; a mid-flight hop uses the cascade_fix_p model
+        traj = (large_correct_by_round
+                if started_large and large_correct_by_round is not None
+                else correct_by_round)
         use_judge = self.feedback.name != "none"
 
         def tier_think(t: BudgetTier) -> int:
             return cfg.think_tokens.get(t.value, 0) \
                 if t is not BudgetTier.NONE else 0
 
-        pred0 = sim.predict(convo_tokens, cid, tier_think(tier))
-        if slo is not None and not slo.admits(router.cm.cost(pred0),
-                                              router.lm.latency(pred0)):
+        cm_t, lm_t = router._models(model_tier)
+        pred0 = sim_t.predict(convo_tokens, cid, tier_think(tier))
+        if slo is not None and not slo.admits(cm_t.cost(pred0),
+                                              lm_t.latency(pred0)):
             result.rounds.append(RoundRecord("", TokenUsage(),
                                              correct=False))
             result.trace.append(Decision(
                 "stop", "slo", 0, tier.value, 0.0, 0.0,
-                router.cm.cost(pred0), router.lm.latency(pred0)))
+                cm_t.cost(pred0), lm_t.latency(pred0),
+                model_tier=model_tier))
             return result
-        usage = sim.complete(convo_tokens, cid, tier, tier_think(tier))
-        history = [bool(correct_by_round[0])]
+        usage = sim_t.complete(convo_tokens, cid, tier, tier_think(tier))
+        spent_c, spent_l = cm_t.cost(usage), lm_t.latency(usage)
+        history = [bool(traj[0])]
         aids = [0]                       # simulated answer ids (vote signal)
         result.rounds.append(RoundRecord("", usage, correct=history[0]))
         result.usage += usage
@@ -483,27 +638,53 @@ class ReflectionController:
             vote = vote_agreement([str(a) for a in aids])
             nxt_tokens = (convo_tokens + prof["out"]
                           + QS.REFLECT_PROMPT_TOKENS + prof["prompt"])
-            pred = sim.predict(nxt_tokens, cid, tier_think(tier))
+            pred = sim_t.predict(nxt_tokens, cid, tier_think(tier))
             signals = RoundSignals(round_idx=idx, answer_delta=delta,
                                    verdict=verdict, vote_frac=vote,
-                                   stalls=stalls, tier=tier)
-            decision = router.decide(signals, slo, result.usage, pred,
-                                     planned_rounds=planned)
+                                   stalls=stalls, tier=tier,
+                                   model_tier=model_tier)
+            if cascade:
+                decision = router.decide(signals, slo, result.usage, pred,
+                                         planned_rounds=planned,
+                                         spent_cost_usd=spent_c,
+                                         spent_latency_s=spent_l)
+            else:
+                decision = router.decide(signals, slo, result.usage, pred,
+                                         planned_rounds=planned)
             result.trace.append(decision)
             if decision.action == "stop":
                 break
             escalated = decision.action == "escalate"
             if escalated:
                 tier = BudgetTier(decision.tier)
+            if decision.action == "escalate_model":
+                # replay on the large simulator from a cold cache — its
+                # complete() bills the whole conversation as fresh
+                # input, byte-matching the decision's esc pricing, so
+                # the hop can never breach a ceiling decide() admitted
+                model_tier = decision.model_tier
+                sim_t = tiers[model_tier]
             convo_tokens = nxt_tokens
-            usage = sim.complete(convo_tokens, cid, tier, tier_think(tier))
+            usage = sim_t.complete(convo_tokens, cid, tier, tier_think(tier))
+            cm_t, lm_t = router._models(model_tier)
+            spent_c += cm_t.cost(usage)
+            spent_l += lm_t.latency(usage)
             idx += 1
-            nxt_correct = (bool(correct_by_round[idx])
-                           if idx < len(correct_by_round) else history[-1])
+            nxt_correct = (bool(traj[idx])
+                           if idx < len(traj) else history[-1])
             if forced:
                 nxt_correct = True
             if (escalated and not nxt_correct
                     and rng.random() < cfg.escalation_fix_p):
+                nxt_correct = True
+                forced = True
+            if (cascade and model_tier == "large" and not started_large
+                    and not nxt_correct
+                    and rng.random() < cfg.cascade_fix_p):
+                # the large model re-answers a question the small model
+                # was stably wrong on — the conditional-cascade gain of
+                # arXiv:2512.19585 / SNIPPETS #2; retried every large
+                # round, retained once fixed
                 nxt_correct = True
                 forced = True
             aids.append(aids[-1] + 1 if nxt_correct != history[-1]
@@ -511,7 +692,13 @@ class ReflectionController:
             history.append(nxt_correct)
             result.rounds.append(RoundRecord("", usage, correct=nxt_correct))
             result.usage += usage
-        router.observe(domain, idx, tier, 100.0 * history[-1], result.usage)
+        if cascade:
+            router.observe(domain, idx, tier, 100.0 * history[-1],
+                           result.usage, model_tier=model_tier,
+                           cost_usd=spent_c, latency_s=spent_l)
+        else:
+            router.observe(domain, idx, tier, 100.0 * history[-1],
+                           result.usage)
         return result
 
 

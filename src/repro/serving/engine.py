@@ -79,7 +79,8 @@ from repro.serving import sampler
 from repro.serving.page_pool import PagePool, PagedSnapshot
 from repro.serving.prefix_cache import (PrefixCache, config_is_recurrent)
 from repro.serving.request import BudgetTier, Request, Status, TokenUsage
-from repro.serving.speculator import NGramSpeculator, draft_corpus
+from repro.serving.speculator import (NGramSpeculator, draft_corpus,
+                                      external_draft_proposal)
 
 PyTree = Any
 
@@ -734,8 +735,18 @@ class Engine:
                        self.scfg.max_seq - 1 - int(self.pos[slot]))
             if kmax <= 0:
                 continue
-            d = self.speculator.propose(
-                draft_corpus(req.prompt, req.output, req.spec_context), kmax)
+            # cascade handoff: a row carrying another model's committed
+            # answer (Request.external_draft) drafts from it positionally
+            # while the output is still a prefix of the draft; n-gram
+            # lookup takes over once the models diverge
+            d = None
+            if req.external_draft is not None:
+                d = external_draft_proposal(req.external_draft, req.output,
+                                            kmax)
+            if d is None:
+                d = self.speculator.propose(
+                    draft_corpus(req.prompt, req.output, req.spec_context),
+                    kmax)
             if d:
                 drafts[slot] = d
         return drafts

@@ -102,6 +102,16 @@ class Request:
     spec_accepted: int = 0      # of those, accepted (never billed unless
     #                             accepted: output_tokens counts only
     #                             committed tokens — the paper's cost axis)
+    # ---- two-model cascade speculation (docs/ARCHITECTURE.md) -------
+    # A VERBATIM candidate continuation from another model: the cascade
+    # feeds the small tier's committed answer here when escalating, and
+    # the large engine drafts from it positionally — external_draft[i]
+    # is proposed as output token i while the committed output is still
+    # a prefix of the draft, then drafting falls back to n-gram lookup
+    # on first divergence.  Verified like any other draft (accepted-
+    # prefix + rollback), so a bad draft costs masked lanes, never a
+    # wrong token, and rejected tokens are never billed.
+    external_draft: Optional[List[int]] = None
 
     @property
     def total_len(self) -> int:

@@ -85,3 +85,26 @@ def draft_corpus(prompt: Sequence[int], output: Sequence[int],
     """The lookup corpus for one request (see module docstring)."""
     ctx = list(spec_context) if spec_context else []
     return ctx + list(prompt) + list(output)
+
+
+def external_draft_proposal(draft: Sequence[int], output: Sequence[int],
+                            k: int) -> Optional[List[int]]:
+    """Positional drafting from another model's committed output.
+
+    The cascade's two-model speculative decode (docs/ARCHITECTURE.md):
+    ``draft`` is the SMALL tier's answer, ``output`` the large tier's
+    committed tokens so far.  While the committed output is still a
+    verbatim prefix of the draft, the next ``k`` draft tokens are the
+    proposal — no n-gram search needed, the small model already decoded
+    this exact continuation.  Returns None once the large model has
+    diverged from (or consumed) the draft; the engine then falls back to
+    n-gram lookup for the rest of the request.  Like every proposal, the
+    result is only ever fed to the verify step — acceptance is decided
+    by the LARGE model's logits, which is what makes the greedy output
+    bit-identical to large-alone decoding (tests/test_cascade.py).
+    """
+    m = len(output)
+    if m >= len(draft) or list(output) != list(draft[:m]):
+        return None
+    cont = list(draft[m:m + k])
+    return cont if cont else None

@@ -457,3 +457,131 @@ def test_routed_engine_determinism_under_preemption(engine_setup):
         [(d.action, d.reason) for d in ample.trace]
     assert [r.response for r in tight_a.rounds] == \
         [r.response for r in ample.rounds]
+
+
+# ---------------------------------------------------------------------------
+# cascade tier decisions: seeded determinism (S3)
+# ---------------------------------------------------------------------------
+
+class _AlwaysWrongTask:
+    """Never-correct task: with a truthful judge this is deterministic
+    escalation pressure (stall evidence every round)."""
+    domain = "math500"
+
+    def prompt(self):
+        return ("What is 2 + 3? State your final answer in "
+                "<answer></answer> tags.")
+
+    def verify(self, response):
+        return False
+
+
+def test_cascade_sim_tier_decisions_replay_stable():
+    """The same seeded request stream routed through a fresh identical
+    two-tier cascade twice produces identical decision traces — the
+    model_tier records included (Decision.key carries the tier, so
+    trace_key equality pins tier choice, hop round and hop pricing)."""
+    from repro.core.reflection import SimulatedCascade
+
+    rows = [[False] * 4, [False, True, True, True], [True] * 4,
+            [False, False, True, True], [False] * 4]
+
+    def run_stream():
+        router = SweetSpotController(
+            CostModel.for_model("nova_micro"),
+            LatencyModel.for_model("nova_micro"),
+            ControllerConfig(cascade=True, cascade_after_stalls=1,
+                             warm_start=False),
+            tier_pricing={
+                "small": (CostModel.for_model("nova_micro"),
+                          LatencyModel.for_model("nova_micro")),
+                "large": (CostModel.for_model("sonnet37"),
+                          LatencyModel.for_model("sonnet37"))})
+        sim = SimulatedCascade(
+            SimulatedBackend("nova_micro", "math500", seed=11),
+            SimulatedBackend("sonnet37", "math500", seed=11))
+        ctrl = ReflectionController(
+            InferenceStrategy(3, feedback="judge"),
+            feedback=LLMJudgeFeedback(seed=0), router=router)
+        rng = np.random.default_rng(42)
+        return [trace_key(ctrl.route_simulated(sim, row, None, rng).trace)
+                for row in rows]
+
+    keys_a, keys_b = run_stream(), run_stream()
+    assert keys_a == keys_b, "replayed stream changed tier decisions"
+    hops = [k for trace in keys_a for k in trace
+            if k[0] == "escalate_model"]
+    assert hops, "stream never exercised the tier hop"
+
+
+@pytest.mark.slow
+def test_cascade_engine_tier_determinism_under_preemption(engine_setup):
+    """Tier decisions survive preemption replay: a tight small-tier
+    page pool with a concurrent filler forces mid-round preemptions, and
+    two such runs (plus an ample-pool run) must pick the same hop round,
+    the same tiers, and identical decision traces."""
+    from repro.configs.base import ServeConfig
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.core.reflection import CascadeBackend
+    from repro.models.registry import build_model, get_smoke_config
+    from repro.serving.engine import Engine
+    m, params = engine_setup
+    jax = pytest.importorskip("jax")
+    large_params = m.init(jax.random.PRNGKey(1))
+    task = _AlwaysWrongTask()
+
+    def cascade_run(num_pages):
+        # 32 pages is the floor (one max_seq request); two stalls delay
+        # the hop to round 1, so the small tier's round-1 conversation
+        # (~24 pages) plus the concurrent filler (~22) exceed the tight
+        # pool mid-round — the hop decision is made AFTER a preemption
+        # replay, which must not change it
+        small_eng = _engine(m, params, max_seq=512, page_size=16,
+                            num_pages=num_pages)
+        large_eng = Engine(m, large_params,
+                           ServeConfig(max_batch=2, max_seq=1024,
+                                       page_size=32,
+                                       slo_price_model="sonnet37"))
+        backend = CascadeBackend(
+            EngineBackend(small_eng, ByteTokenizer(), max_new_tokens=16),
+            EngineBackend(large_eng, ByteTokenizer(), max_new_tokens=16))
+        router = SweetSpotController(
+            CostModel.for_model("nova_micro"),
+            LatencyModel.for_model("nova_micro"),
+            ControllerConfig(max_rounds=2, stable_delta=1.0,
+                             stop_on_stable=False, use_vote=False,
+                             escalate=False, cascade=True,
+                             cascade_after_stalls=2, warm_start=False),
+            tier_pricing={
+                "small": (CostModel.for_model("nova_micro"),
+                          LatencyModel.for_model("nova_micro")),
+                "large": (CostModel.for_model("sonnet37"),
+                          LatencyModel.for_model("sonnet37"))})
+        ctrl = ReflectionController(
+            InferenceStrategy(2, feedback="judge"),
+            feedback=LLMJudgeFeedback(judge_accuracy=1.0, seed=0),
+            router=router)
+        filler = Request(prompt=[1] + list(range(3, 283)),
+                         max_new_tokens=64, eos_id=None)
+        small_eng.submit(filler)
+        res = ctrl.run_task(backend, task,
+                            SLO(max_cost_usd=1.0, max_latency_s=1e4))
+        small_eng.run()                  # drain the filler
+        return res, small_eng.model_steps["preemptions"], backend
+
+    tight_a, preempt_a, bk_a = cascade_run(num_pages=32)
+    tight_b, preempt_b, _ = cascade_run(num_pages=32)
+    ample, _, _ = cascade_run(num_pages=0)
+    assert preempt_a > 0, "workload was not preemption-heavy"
+    assert preempt_a == preempt_b
+    assert trace_key(tight_a.trace) == trace_key(tight_b.trace)
+    actions = [d.action for d in tight_a.trace]
+    assert actions.count("escalate_model") == 1, \
+        "preemption-heavy cascade run did not hop exactly once"
+    # the ample run picks the same tiers at the same rounds
+    assert [(d.action, d.model_tier) for d in tight_a.trace] == \
+        [(d.action, d.model_tier) for d in ample.trace]
+    # per-request tier records (Decision.key rows) captured the hop
+    lreq = bk_a.large.last_requests[0]
+    assert lreq.decision_trace and \
+        all(rec[4] == "large" for rec in lreq.decision_trace)

@@ -38,7 +38,9 @@ from repro.core.budget import InferenceStrategy
 from repro.core.controller import (ControllerConfig, SLO,
                                    SweetSpotController, trace_key)
 from repro.core.feedback import LLMJudgeFeedback
-from repro.core.reflection import ReflectionController, SimulatedBackend
+from repro.core.reflection import (CascadeBackend, EngineBackend,
+                                   ReflectionController, SimulatedBackend,
+                                   SimulatedCascade)
 from repro.models.registry import build_model, get_smoke_config
 from repro.serving.engine import Engine
 from repro.serving.request import BudgetTier, Request, Status, TokenUsage
@@ -252,3 +254,244 @@ else:
         for _ in range(30):
             _check_controller_off_parity(_random_controller_reqs(rng),
                                          [0, 1, 3][int(rng.integers(3))])
+
+
+# ---------------------------------------------------------------------------
+# cascade policy invariants (model-tier axis): at-most-once escalation,
+# SLO headroom for the priced tier delta, monotone cross-tier spend, and
+# cascade-off bit-parity with the single-tier router on sim AND engine.
+# ---------------------------------------------------------------------------
+
+_TIER_ORDER = {"small": 0, "large": 1}
+
+
+def _cascade_pricing():
+    return {"small": (CostModel.for_model("nova_micro"),
+                      LatencyModel.for_model("nova_micro")),
+            "large": (CostModel.for_model("sonnet37"),
+                      LatencyModel.for_model("sonnet37"))}
+
+
+def _random_cascade_reqs(rng: np.random.Generator):
+    """Mirror of cascade_strategy for the no-hypothesis fallback.  The
+    slo kind spans the cascade's three regimes: unconstrained ("none",
+    hops admitted on stall evidence alone), small-tier-only ("tight",
+    funds nova rounds but never a sonnet cold replay) and funded
+    ("rich", ceilings scaled past the large tier's cold-replay price)."""
+    return [(
+        [bool(rng.integers(2)) for _ in range(4)],       # correctness/round
+        float(rng.uniform(1.5, 8.0)),                    # cost ceiling mult
+        float(rng.uniform(1.5, 8.0)),                    # latency ceiling mult
+        ["none", "tight", "rich"][int(rng.integers(3))],
+    ) for _ in range(int(rng.integers(1, 7)))]
+
+
+if HAVE_HYPOTHESIS:
+    cascade_strategy = st.lists(
+        st.tuples(
+            st.lists(st.booleans(), min_size=4, max_size=4),
+            st.floats(1.5, 8.0),
+            st.floats(1.5, 8.0),
+            st.sampled_from(["none", "tight", "rich"]),
+        ),
+        min_size=1, max_size=6)
+else:
+    cascade_strategy = None
+
+
+def _check_cascade_invariants(reqs, seed, judge_accuracy=None,
+                              warm_start=True):
+    """Arbitrary trajectories + SLO regimes on a two-tier cascade: the
+    escalate_model hop fires AT MOST ONCE per request, never without SLO
+    headroom for the priced tier delta (the hop decision carries the
+    large tier's cold-replay price as its prediction), the model tier
+    never goes backwards, spend stays monotone ACROSS the tier boundary,
+    and the priced cross-tier totals respect the hard ceilings."""
+    cm = CostModel.for_model("nova_micro")
+    lm = LatencyModel.for_model("nova_micro")
+    cfg_kw = dict(cascade=True, cascade_after_stalls=1,
+                  warm_start=warm_start)
+    if judge_accuracy is not None:
+        cfg_kw["sim_judge_accuracy"] = judge_accuracy
+    router = SweetSpotController(cm, lm, ControllerConfig(**cfg_kw),
+                                 tier_pricing=_cascade_pricing())
+    c0, l0 = cm.cost(_round0_usage()), lm.latency(_round0_usage())
+    rng = np.random.default_rng(seed)
+    sim = SimulatedCascade(
+        SimulatedBackend("nova_micro", "math500", seed=seed % 1000),
+        SimulatedBackend("sonnet37", "math500", seed=seed % 1000))
+    hops = 0
+    for row, cmult, lmult, slo_kind in reqs:
+        ctrl = ReflectionController(
+            InferenceStrategy(3, feedback="judge"),
+            feedback=LLMJudgeFeedback(seed=0), router=router)
+        if slo_kind == "none":
+            slo = None
+        else:
+            # "rich" scales the ceilings past the sonnet cold replay
+            # (~150x a nova round); "tight" funds only nova rounds
+            rich = slo_kind == "rich"
+            slo = SLO(max_cost_usd=c0 * cmult * (400.0 if rich else 1.0),
+                      max_latency_s=l0 * lmult * (40.0 if rich else 1.0))
+        res = ctrl.route_simulated(sim, row, slo, rng)
+        trace = res.trace
+        actions = [d.action for d in trace]
+        assert actions.count("escalate_model") <= 1, \
+            "cascade escalated more than once"
+        assert trace[-1].action == "stop"
+        assert all(a in ("reflect", "escalate", "escalate_model")
+                   for a in actions[:-1])
+        assert len(trace) == res.rounds_run + 1
+        costs = [d.cost_usd for d in trace]
+        lats = [d.latency_s for d in trace]
+        assert costs == sorted(costs), "cross-tier spend not monotone"
+        assert lats == sorted(lats), "cross-tier latency not monotone"
+        tiers_seq = [_TIER_ORDER[d.model_tier] for d in trace]
+        assert tiers_seq == sorted(tiers_seq), "model tier went backwards"
+        for i, d in enumerate(trace):
+            if d.action != "escalate_model":
+                continue
+            hops += 1
+            assert d.model_tier == "large"
+            assert d.reason == "stalled-wrong-model"
+            if slo is not None:
+                # headroom for the PRICED tier delta: the hop decision's
+                # prediction is the large tier's cold-replay round
+                assert (d.cost_usd + d.pred_cost_usd
+                        <= slo.max_cost_usd + 1e-12)
+                assert (d.latency_s + d.pred_latency_s
+                        <= slo.max_latency_s + 1e-9)
+            assert all(x.model_tier == "large" for x in trace[i:]), \
+                "post-hop decision reverted to the small tier"
+        if slo is not None and slo_kind == "tight":
+            assert "escalate_model" not in actions, \
+                "hop admitted without headroom for the tier delta"
+        if slo is not None:
+            # HARD ceilings on the priced cross-tier totals (the final
+            # decision's floats are the exact tier-priced spend)
+            assert trace[-1].cost_usd <= slo.max_cost_usd + 1e-12
+            assert trace[-1].latency_s <= slo.max_latency_s + 1e-9
+    return hops
+
+
+def _check_cascade_off_parity(reqs, seed):
+    """A router holding a two-tier price book over a SimulatedCascade,
+    with ``cfg.cascade`` OFF, must be byte-identical to PR 5's
+    single-tier router: same decision trace (tier records included),
+    same per-round usage, same totals."""
+    cm = CostModel.for_model("nova_micro")
+    lm = LatencyModel.for_model("nova_micro")
+    c0, l0 = cm.cost(_round0_usage()), lm.latency(_round0_usage())
+    router_a = SweetSpotController(cm, lm)
+    router_b = SweetSpotController(cm, lm,
+                                   tier_pricing=_cascade_pricing())
+    sim_a = SimulatedBackend("nova_micro", "math500", seed=seed % 1000)
+    sim_b = SimulatedCascade(
+        SimulatedBackend("nova_micro", "math500", seed=seed % 1000),
+        SimulatedBackend("sonnet37", "math500", seed=seed % 1000))
+    rng_a = np.random.default_rng(seed)
+    rng_b = np.random.default_rng(seed)
+    for row, cmult, lmult, fb in reqs:
+        def mk(router):
+            return ReflectionController(
+                InferenceStrategy(3, feedback=fb),
+                feedback=(LLMJudgeFeedback(seed=0) if fb == "judge"
+                          else None),
+                router=router)
+        slo = SLO(max_cost_usd=c0 * cmult, max_latency_s=l0 * lmult)
+        ra = mk(router_a).route_simulated(sim_a, row, slo, rng_a)
+        rb = mk(router_b).route_simulated(sim_b, row, slo, rng_b)
+        assert trace_key(ra.trace) == trace_key(rb.trace), \
+            "cascade-off changed the single-tier decision stream"
+        assert ra.usage == rb.usage
+        assert [r.usage for r in ra.rounds] == [r.usage for r in rb.rounds]
+        assert [r.correct for r in ra.rounds] == \
+            [r.correct for r in rb.rounds]
+
+
+def test_cascade_hop_deterministic_single():
+    """Deterministic floor under the fuzz: a truthful judge and a
+    stably-wrong trajectory force exactly one hop per request."""
+    hops = _check_cascade_invariants(
+        [([False, False, False, False], 8.0, 8.0, "none")] * 3,
+        seed=0, judge_accuracy=1.0, warm_start=False)
+    assert hops == 3
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(reqs=cascade_strategy, seed=st.integers(0, 2**31 - 1))
+    def test_cascade_fuzz_invariants(reqs, seed):
+        _check_cascade_invariants(reqs, seed)
+
+    @settings(max_examples=30, deadline=None)
+    @given(reqs=controller_strategy, seed=st.integers(0, 2**31 - 1))
+    def test_cascade_off_bit_parity(reqs, seed):
+        _check_cascade_off_parity(reqs, seed)
+else:
+    def test_cascade_fuzz_invariants():
+        rng = np.random.default_rng(2)
+        hops = 0
+        for _ in range(30):
+            hops += _check_cascade_invariants(_random_cascade_reqs(rng),
+                                              int(rng.integers(1 << 31)))
+        assert hops > 0, "fuzz never exercised the escalate_model branch"
+
+    def test_cascade_off_bit_parity():
+        rng = np.random.default_rng(3)
+        for _ in range(30):
+            _check_cascade_off_parity(_random_controller_reqs(rng),
+                                      int(rng.integers(1 << 31)))
+
+
+def test_cascade_off_engine_parity(model_setup):
+    """Engine-side pin of the cascade-off parity: a CascadeBackend (two
+    real engines) under a cascade-off router serves the small tier
+    byte-identically to a plain single-engine routed run — responses,
+    usage and decision trace all equal."""
+    from repro.core.reflection import ReflectionController as RC
+    from repro.data.tokenizer import ByteTokenizer
+
+    model, params = model_setup
+    large_params = model.init(jax.random.PRNGKey(1))
+    scfg = ServeConfig(max_batch=2, max_seq=1024, page_size=32)
+
+    class _T:
+        domain = "math500"
+
+        def prompt(self):
+            return ("What is 2 + 3? State your final answer in "
+                    "<answer></answer> tags.")
+
+        def verify(self, response):
+            return False
+
+    def run(two_tier):
+        small = EngineBackend(Engine(model, params, scfg), ByteTokenizer(),
+                              max_new_tokens=12)
+        if two_tier:
+            backend = CascadeBackend(
+                small, EngineBackend(Engine(model, large_params, scfg),
+                                     ByteTokenizer(), max_new_tokens=12))
+            pricing = _cascade_pricing()
+        else:
+            backend = small
+            pricing = None
+        router = SweetSpotController(
+            CostModel.for_model("nova_micro"),
+            LatencyModel.for_model("nova_micro"),
+            ControllerConfig(max_rounds=2, warm_start=False),
+            tier_pricing=pricing)
+        ctrl = RC(InferenceStrategy(2, feedback="judge"),
+                  feedback=LLMJudgeFeedback(judge_accuracy=1.0, seed=0),
+                  router=router)
+        return ctrl.run_task(backend, _T(), slo=None), backend
+
+    ra, _ = run(two_tier=False)
+    rb, cascade_backend = run(two_tier=True)
+    assert trace_key(ra.trace) == trace_key(rb.trace)
+    assert [r.response for r in ra.rounds] == [r.response for r in rb.rounds]
+    assert [r.usage for r in ra.rounds] == [r.usage for r in rb.rounds]
+    assert ra.usage == rb.usage
+    # the large engine never saw a request
+    assert cascade_backend.large.engine.model_steps["prefill_tokens"] == 0

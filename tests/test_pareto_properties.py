@@ -77,6 +77,34 @@ def _check_sweet_spot_ceilings(raw, max_lat, max_cost):
                 assert p.accuracy <= best.accuracy
 
 
+def _check_upsert_tier_identity(stream):
+    """Upsert identity is (name, model): after an arbitrary upsert
+    stream, no two points share a (name, model) key, every surviving
+    point carries its LATEST upserted stats (a refresh never leaves a
+    stale same-key twin behind), and the frontier stays mutually
+    non-dominated — the cascade-frontier pin (core/pareto.py)."""
+    fr = OnlineFrontier(OBJ3)
+    last = {}
+    for name, model, (a, l, c) in stream:
+        fr.upsert(ConfigPoint(name, model, "s", a, l, c))
+        last[(name, model)] = (a, l, c)
+    keys = [(p.name, p.model) for p in fr.points]
+    assert len(keys) == len(set(keys)), "duplicate (name, model) entries"
+    for p in fr.points:
+        assert (p.accuracy, p.latency_s, p.cost_usd) == \
+            last[(p.name, p.model)], "stale point survived its refresh"
+    for x, y in itertools.permutations(fr.points, 2):
+        assert not dominates(x, y)
+
+
+def _random_tier_stream(rng: np.random.Generator):
+    n = int(rng.integers(1, 30))
+    return [(["a", "b", "c"][int(rng.integers(3))],
+             ["small", "large"][int(rng.integers(2))],
+             tuple(float(v) for v in rng.integers(0, 6, size=3)))
+            for _ in range(n)]
+
+
 def _check_incremental_equals_batch(raw):
     """OnlineFrontier after streaming inserts == pareto_frontier over the
     whole batch (any insertion order), and its sweet_spot under any
@@ -133,6 +161,17 @@ if HAVE_HYPOTHESIS:
     @given(raw=points_strategy)
     def test_incremental_insert_equals_batch(raw):
         _check_incremental_equals_batch(raw)
+
+    tier_stream_strategy = st.lists(
+        st.tuples(st.sampled_from(["a", "b", "c"]),
+                  st.sampled_from(["small", "large"]),
+                  st.tuples(coord, coord, coord)),
+        min_size=1, max_size=30)
+
+    @settings(max_examples=60, deadline=None)
+    @given(stream=tier_stream_strategy)
+    def test_upsert_tier_identity(stream):
+        _check_upsert_tier_identity(stream)
 else:
     def test_frontier_permutation_invariant():
         rng = np.random.default_rng(0)
@@ -157,6 +196,11 @@ else:
         for _ in range(60):
             _check_incremental_equals_batch(_random_raw(rng))
 
+    def test_upsert_tier_identity():
+        rng = np.random.default_rng(4)
+        for _ in range(60):
+            _check_upsert_tier_identity(_random_tier_stream(rng))
+
 
 def test_upsert_replaces_by_name():
     fr = OnlineFrontier(OBJ3)
@@ -168,3 +212,31 @@ def test_upsert_replaces_by_name():
     # a refreshed mean that is now dominated drops the point
     assert not fr.upsert(ConfigPoint("b", "m", "s", 40.0, 5.0, 5.0))
     assert {p.name for p in fr.points} == {"a"}
+
+
+def test_upsert_keys_by_name_and_model_tier():
+    """Cascade pin (S4): per-tier entries for the SAME strategy name are
+    distinct identities — refreshing one tier's running mean never
+    retracts the other tier's point, while cross-tier DOMINATION still
+    prunes as usual."""
+    fr = OnlineFrontier(OBJ3)
+    both = {("math@reflect1", "small"), ("math@reflect1", "large")}
+    # non-dominating small/large entries for one strategy coexist
+    assert fr.upsert(ConfigPoint("math@reflect1", "small", "reflect1",
+                                 70.0, 1.0, 1.0))
+    assert fr.upsert(ConfigPoint("math@reflect1", "large", "reflect1",
+                                 80.0, 5.0, 5.0))
+    assert {(p.name, p.model) for p in fr.points} == both
+    # a small-tier refresh replaces only the small-tier entry
+    assert fr.upsert(ConfigPoint("math@reflect1", "small", "reflect1",
+                                 72.0, 1.0, 1.0))
+    assert {(p.name, p.model) for p in fr.points} == both
+    small = next(p for p in fr.points if p.model == "small")
+    large = next(p for p in fr.points if p.model == "large")
+    assert small.accuracy == 72.0 and large.accuracy == 80.0
+    # a large-tier refresh that dominates the small entry evicts it —
+    # tiers are separate identities, not separate frontiers
+    assert fr.upsert(ConfigPoint("math@reflect1", "large", "reflect1",
+                                 90.0, 0.5, 0.5))
+    assert {(p.name, p.model) for p in fr.points} == \
+        {("math@reflect1", "large")}
