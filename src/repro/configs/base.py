@@ -186,6 +186,14 @@ class ServeConfig:
     # copies and snapshot pins).  Accuracy caveat + A/B recipe:
     # docs/SERVING.md#quantized-kv-cache-int8.
     kv_dtype: Optional[str] = None
+    # Paged-attention READ implementation: "pallas" walks page tables
+    # with the fused extend/verify + decode kernels (page-read-once, no
+    # dense pool copy); "xla" densifies via the gather path (the parity
+    # reference, and the only fast option off-TPU — Pallas interpret
+    # mode is orders of magnitude slower).  None = auto: pallas on TPU,
+    # xla elsewhere.  Greedy outputs are token-identical either way
+    # (tests/test_paged_extend.py pins this).  docs/SERVING.md.
+    attn_impl: Optional[str] = None
     max_think_tokens_low: int = 1024       # paper's "low" thinking budget
     max_think_tokens_high: int = 4096      # paper's "high" thinking budget
     temperature: float = 0.0

@@ -2,6 +2,12 @@
 
 ``interpret`` defaults to True off-TPU (CPU validation mode) and False on
 TPU where the Mosaic pipeline compiles the real kernels.
+
+Block parameters (``bq``/``bk``/``pages_per_block``) default to None,
+which resolves through the committed autotuning table
+(kernels/tuning.py) at trace time — per (backend, kernel, shape bucket),
+falling back to the old hardcoded 128s when no entry exists.  Passing an
+explicit value always wins (tests and sweeps pin blocks that way).
 """
 from __future__ import annotations
 
@@ -10,10 +16,12 @@ from typing import Optional
 
 import jax
 
+from repro.kernels import tuning
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
 from repro.kernels.paged_attention import paged_decode_attention as _paged
+from repro.kernels.paged_extend import paged_extend_attention as _paged_ext
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
 
@@ -22,19 +30,27 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("window", "bq", "bk", "interpret"))
-def flash_attention(q, k, v, *, window: Optional[int] = None, bq: int = 128,
-                    bk: int = 128, interpret: Optional[bool] = None):
+def flash_attention(q, k, v, *, window: Optional[int] = None,
+                    bq: Optional[int] = None, bk: Optional[int] = None,
+                    interpret: Optional[bool] = None):
     interp = (not _on_tpu()) if interpret is None else interpret
+    if bq is None or bk is None:
+        tuned = tuning.lookup("flash", s=q.shape[2], hd=q.shape[3])
+        bq = tuned["bq"] if bq is None else bq
+        bk = tuned["bk"] if bk is None else bk
     return _flash(q, k, v, window=window, bq=bq, bk=bk, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
 def decode_attention(q, k, v, tok, pos, *, k_scale=None, k_zero=None,
                      v_scale=None, window: Optional[int] = None,
-                     bk: int = 128, interpret: Optional[bool] = None):
+                     bk: Optional[int] = None,
+                     interpret: Optional[bool] = None):
     """k_scale/k_zero/v_scale ([B,C,K] f32) select the fused-dequant int8
     kernel (k/v int8)."""
     interp = (not _on_tpu()) if interpret is None else interpret
+    if bk is None:
+        bk = tuning.lookup("decode", ctx=k.shape[1], hd=q.shape[-1])["bk"]
     return _decode(q, k, v, tok, pos, k_scale=k_scale, k_zero=k_zero,
                    v_scale=v_scale, window=window, bk=bk, interpret=interp)
 
@@ -50,6 +66,30 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, pos, *,
     return _paged(q, k_pool, v_pool, page_table, pos, k_scale=k_scale,
                   k_zero=k_zero, v_scale=v_scale, window=window,
                   interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq",
+                                             "pages_per_block", "interpret"))
+def paged_extend_attention(q, k_pool, v_pool, page_table, pos0, *,
+                           k_scale=None, k_zero=None, v_scale=None,
+                           window: Optional[int] = None,
+                           bq: Optional[int] = None,
+                           pages_per_block: Optional[int] = None,
+                           interpret: Optional[bool] = None):
+    """Paged multi-lane extend/verify attention (q: [B,Sx,K,G,hd]); the
+    kernel behind chunked prefill and speculative verify.  Scale sidecar
+    pools ([P,ps,K] f32) select the fused-dequant int8 variant."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    if bq is None or pages_per_block is None:
+        B, Sx, K, G, hd = q.shape
+        tuned = tuning.lookup("paged_extend", r=Sx * G, hd=hd,
+                              ctx=page_table.shape[1] * k_pool.shape[1])
+        bq = tuned["bq"] if bq is None else bq
+        if pages_per_block is None:
+            pages_per_block = tuned["pages_per_block"]
+    return _paged_ext(q, k_pool, v_pool, page_table, pos0, k_scale=k_scale,
+                      k_zero=k_zero, v_scale=v_scale, window=window, bq=bq,
+                      pages_per_block=pages_per_block, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("bd", "interpret"))

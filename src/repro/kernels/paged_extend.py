@@ -1,0 +1,191 @@
+"""Pallas TPU paged extend/verify attention: Sx query lanes over a paged
+KV pool.
+
+  q:          [B, Sx, K, G, hd]    (lane l sits at absolute pos0[b] + l)
+  k_pool:     [P, ps, K, hd]       (shared page pool, P physical pages)
+  v_pool:     [P, ps, K, hd]
+  page_table: [B, NP] int32        (logical page -> physical page, -1 = unmapped)
+  pos0:       [B] int32            (absolute position of lane 0)
+  out:        [B, Sx, K, G, hd]
+
+This is the kernel behind ``attention_extend_paged`` — the engine's
+HOTTEST wide step: every chunked-prefill chunk, every mixed step, and
+the speculative VERIFY step ([max_batch, 1 + spec_tokens]) go through
+it.  The XLA reference path densifies the ENTIRE pool into
+[B, NP*ps, K, hd] via ``_gather_pages`` on every call, so its byte
+traffic is O(pool) regardless of context.  Here the page table is a
+SCALAR-PREFETCH operand (``pltpu.PrefetchScalarGridSpec``) and the k/v
+BlockSpec index maps resolve ``page_table[b, j]`` into the page to DMA
+next, exactly like kernels/paged_attention.py — but with Sx*G query
+rows resident in VMEM at once, so EACH PAGE IS READ ONCE ACROSS ALL
+DRAFT/VERIFY/PREFILL LANES (the page-read-once contract) instead of
+once per dense copy.
+
+Grid (B, K, NP/ppb) with the LAST axis sequential (TPU semantics):
+page blocks stream through VMEM while fp32 m/l/acc accumulators persist
+in scratch across iterations; the final iteration writes out.
+``pages_per_block`` (ppb) widens one sequential step to ppb page DMAs —
+physically scattered pages cannot form one block, so the pool rides in
+ppb times as separate BlockSpec'd inputs whose index maps walk
+``page_table[b, jb*ppb + i]``.  ``bq`` tiles the Sx*G query rows per
+matmul (MXU-shaped score tiles for wide prefill chunks).  Both come
+from the autotuned table (kernels/tuning.py) when not forced.
+
+Masking is pure position arithmetic: lane l attends token t iff its
+page is mapped and ``t <= pos0 + l`` (and ``t > pos0 + l - window``
+when sliding-window).  Unmapped pages clamp to page 0 for the DMA and
+mask out of the softmax.  Pad lanes (engine ``n_valid``) compute
+garbage rows that no caller consumes — identical semantics to the XLA
+path, which also computes them.
+
+QUANTIZED mode (``k_scale``/``k_zero``/``v_scale`` pools [P, ps, K]
+f32; payload pools int8): sidecar pages ride the same page-table walk
+and tiles are dequantized in-register right before the QK^T / PV
+matmuls (asymmetric K, symmetric V — kernels/kv_quant.py), with fp32
+accumulators unchanged.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _extend_kernel(pt_ref, q_ref, *rest, ps: int, npb: int, ppb: int,
+                   sx: int, g: int, bq: int, scale: float,
+                   window: Optional[int], quant: bool):
+    """One body for fp and int8.  ``rest`` carries ppb interleaved page
+    refs — (k, v) or (k, v, ks, kz, vs) per sub-page — then pos, out and
+    the three fp32 scratch accumulators."""
+    per = 5 if quant else 2
+    pages, rest = rest[:ppb * per], rest[ppb * per:]
+    pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    b = pl.program_id(0)
+    jb = pl.program_id(2)                                 # page-block index
+
+    @pl.when(jb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    R = sx * g
+    q = (q_ref[0, :, 0].astype(jnp.float32) * scale).reshape(R, hd_ := q_ref.shape[-1])
+    # row r belongs to query lane r // g at absolute position pos0 + lane
+    lane = jax.lax.broadcasted_iota(jnp.int32, (R, ps), 0) // g
+    pos_row = pos_ref[0, 0] + lane                        # [R, ps]
+
+    for i in range(ppb):
+        refs = pages[i * per:(i + 1) * per]
+        k = refs[0][0, :, 0].astype(jnp.float32)          # [ps, hd]
+        v = refs[1][0, :, 0].astype(jnp.float32)
+        if quant:
+            ks, kz, vs = (r[0, :, 0] for r in refs[2:5])
+            k = (k + 128.0) * ks[:, None] + kz[:, None]
+            v = v * vs[:, None]
+        j = jb * ppb + i                                  # logical page
+        mapped = pt_ref[b, j] >= 0
+        # absolute token index held by each slot of this logical page
+        t = j * ps + jax.lax.broadcasted_iota(jnp.int32, (R, ps), 1)
+        valid = mapped & (t <= pos_row)
+        if window is not None:
+            valid = valid & (t > pos_row - window)
+
+        for r0 in range(0, R, bq):
+            rs = slice(r0, min(r0 + bq, R))
+            s = jax.lax.dot_general(q[rs], k,
+                                    (((1,), (1,)), ((), ())))  # [bq, ps]
+            s = jnp.where(valid[rs], s, NEG_INF)
+            m_prev, l_prev = m_ref[rs], l_ref[rs]
+            acc_prev = acc_ref[rs]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+            p = jnp.exp(s - m_new[:, None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=1)
+            acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())))
+            m_ref[rs], l_ref[rs], acc_ref[rs] = m_new, l_new, acc_new
+
+    @pl.when(jb == npb - 1)
+    def _fin():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0] = out.reshape(sx, g, hd_).astype(o_ref.dtype)
+
+
+def paged_extend_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, page_table: jax.Array,
+                           pos0: jax.Array,
+                           *, k_scale: Optional[jax.Array] = None,
+                           k_zero: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
+                           window: Optional[int] = None,
+                           bq: Optional[int] = None,
+                           pages_per_block: int = 1,
+                           interpret: bool = True) -> jax.Array:
+    """q: [B,Sx,K,G,hd]; k/v_pool: [P,ps,K,hd]; page_table: [B,NP];
+    pos0: [B].  With k_scale/k_zero/v_scale ([P,ps,K] f32 sidecar
+    pools) the payload pools are int8 and dequantized in-register."""
+    B, Sx, K, G, hd = q.shape
+    ps = k_pool.shape[1]
+    NP = page_table.shape[1]
+    scale = hd ** -0.5
+    quant = k_scale is not None
+    assert quant == (k_zero is not None) == (v_scale is not None)
+    R = Sx * G
+    bq = R if bq is None else max(1, min(bq, R))
+    # physically scattered pages cannot widen a DMA block, so ppb rides as
+    # ppb separate page-walk inputs; it must tile the table exactly
+    ppb = max(d for d in range(1, max(1, pages_per_block) + 1)
+              if NP % d == 0)
+    npb = NP // ppb
+    pos2 = pos0[:, None].astype(jnp.int32)                # [B,1]
+
+    def kv_map(i):
+        # unmapped logical pages DMA physical page 0; the body masks them
+        return lambda b, h, jb, pt: (
+            jnp.maximum(pt[b, jb * ppb + i], 0), 0, h, 0)
+
+    def sc_map(i):
+        return lambda b, h, jb, pt: (
+            jnp.maximum(pt[b, jb * ppb + i], 0), 0, h)
+
+    page_in, page_specs = [], []
+    for i in range(ppb):
+        page_in += [k_pool, v_pool]
+        page_specs += [pl.BlockSpec((1, ps, 1, hd), kv_map(i))] * 2
+        if quant:
+            page_in += [k_scale, k_zero, v_scale]
+            page_specs += [pl.BlockSpec((1, ps, 1), sc_map(i))] * 3
+
+    kernel = functools.partial(_extend_kernel, ps=ps, npb=npb, ppb=ppb,
+                               sx=Sx, g=G, bq=bq, scale=scale,
+                               window=window, quant=quant)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, npb),
+        in_specs=[
+            pl.BlockSpec((1, Sx, 1, G, hd),
+                         lambda b, h, jb, pt: (b, 0, h, 0, 0)),
+            *page_specs,
+            pl.BlockSpec((1, 1), lambda b, h, jb, pt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Sx, 1, G, hd),
+                               lambda b, h, jb, pt: (b, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((R,), jnp.float32),
+            pltpu.VMEM((R,), jnp.float32),
+            pltpu.VMEM((R, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sx, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q, *page_in, pos2)

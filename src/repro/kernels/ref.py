@@ -95,6 +95,45 @@ def paged_decode_attention_ref(q, k_pool, v_pool, page_table, pos, *,
     return o.astype(q.dtype)
 
 
+def paged_extend_attention_ref(q, k_pool, v_pool, page_table, pos0, *,
+                               k_scale=None, k_zero=None, v_scale=None,
+                               window: Optional[int] = None):
+    """q: [B,Sx,K,G,hd]; k/v_pool: [P,ps,K,hd]; page_table: [B,NP];
+    pos0: [B] (absolute position of query lane 0).
+
+    Dense-gather oracle for the paged extend/verify kernel: lane l of
+    request b sits at ``pos0[b] + l`` and attends every mapped slot
+    ``t <= pos0[b] + l`` (minus the sliding window, when set) — the
+    per-lane staircase mask of ``attention_extend_paged``.  Optional
+    scale sidecar pools ([P,ps,K]) mark an int8 pool.
+    """
+    B, Sx, K, G, hd = q.shape
+    ps = k_pool.shape[1]
+    NP = page_table.shape[1]
+    idx = jnp.maximum(page_table, 0)                          # [B,NP]
+
+    def gather(pool):
+        return pool[idx].reshape(B, NP * ps, *pool.shape[2:])
+
+    kg, vg = gather(k_pool), gather(v_pool)
+    if k_scale is not None:
+        kg = kv_quant.dequantize_k(kg, gather(k_scale), gather(k_zero))
+        vg = kv_quant.dequantize_v(vg, gather(v_scale))
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bskgt", qf, kg.astype(jnp.float32)) \
+        * hd ** -0.5
+    t = jnp.arange(NP * ps)[None, None, :]                    # [1,1,T]
+    pos_lane = pos0[:, None] + jnp.arange(Sx)[None, :]        # [B,Sx]
+    mapped = jnp.repeat(page_table >= 0, ps, axis=1)[:, None, :]
+    valid = mapped & (t <= pos_lane[..., None])
+    if window is not None:
+        valid = valid & (t > pos_lane[..., None] - window)
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bskgt,btkd->bskgd", p, vg.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
 def mamba_scan_ref(dt, Bm, Cm, x, A, Dsk, h0):
     """Sequential reference for the selective scan."""
     B, S, D = dt.shape

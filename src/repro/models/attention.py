@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import kv_quant as Q
+from repro.kernels import ops
 from repro.models import layers as L
 
 NEG_INF = -1e30
@@ -580,10 +581,14 @@ def _paged_write(pool: Dict, k: jax.Array, v: jax.Array, phys: jax.Array,
 
 def attention_decode_paged(cfg: ModelConfig, p: Dict, x: jax.Array,
                            pool: Dict, pos: jax.Array,
-                           page_table: jax.Array, window: Optional[int]
+                           page_table: jax.Array, window: Optional[int],
+                           impl: Optional[str] = None
                            ) -> Tuple[jax.Array, Dict]:
     """One-token decode over the page pool.  x: [B,1,d]; pos: [B];
-    page_table: [B, NP] int32."""
+    page_table: [B, NP] int32.  ``impl="pallas"`` reads the pool with the
+    page-table-walking kernel (kernels/paged_attention.py) instead of the
+    XLA ``_gather_pages`` densify; the write scatter stays XLA either
+    way, and the kernel reads the post-write pool."""
     B = x.shape[0]
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     G = H // K
@@ -596,6 +601,14 @@ def attention_decode_paged(cfg: ModelConfig, p: Dict, x: jax.Array,
     pool = _paged_write(pool, k[:, 0], v[:, 0], phys, pos % ps)
 
     q = q.reshape(B, K, G, hd)
+    if impl == "pallas":
+        out = ops.paged_decode_attention(
+            q, pool["kp"], pool["vp"], page_table, pos,
+            k_scale=pool.get("ksp"), k_zero=pool.get("kzp"),
+            v_scale=pool.get("vsp"), window=window)
+        out = out.reshape(B, 1, H, hd).astype(x.dtype)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+        return y, pool
     scale = hd ** -0.5
     quant = "ksp" in pool
     if quant:
@@ -627,7 +640,8 @@ def attention_decode_paged(cfg: ModelConfig, p: Dict, x: jax.Array,
 def attention_extend_paged(cfg: ModelConfig, p: Dict, x: jax.Array,
                            pool: Dict, pos0: jax.Array, window: Optional[int],
                            page_table: jax.Array,
-                           valid: Optional[jax.Array] = None
+                           valid: Optional[jax.Array] = None,
+                           impl: Optional[str] = None
                            ) -> Tuple[jax.Array, Dict]:
     """Multi-token extension over the page pool: x: [B, Sx, d] continues at
     position pos0 [B]; the engine has already mapped (and COW-resolved)
@@ -635,7 +649,13 @@ def attention_extend_paged(cfg: ModelConfig, p: Dict, x: jax.Array,
     table[(pos0+l)//ps] offset (pos0+l)%ps; invalid lanes never reach the
     pool.  There is no ring aliasing: distinct positions always land in
     distinct (page, offset) slots, so — unlike the dense ring path — no
-    lane-deduplication or capacity clamp is needed."""
+    lane-deduplication or capacity clamp is needed.
+
+    ``impl="pallas"`` reads the post-write pool with the fused paged
+    extend/verify kernel (kernels/paged_extend.py): each mapped page is
+    DMA'd once for all Sx lanes instead of densifying the whole pool via
+    ``_gather_pages``.  Invalid lanes compute unused rows on both paths;
+    the write scatter stays XLA on both paths."""
     B, Sx, _ = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     G = H // K
@@ -652,6 +672,14 @@ def attention_extend_paged(cfg: ModelConfig, p: Dict, x: jax.Array,
     pool = _paged_write(pool, k, v, phys, positions % ps)
 
     q = q.reshape(B, Sx, K, G, hd)
+    if impl == "pallas":
+        out = ops.paged_extend_attention(
+            q, pool["kp"], pool["vp"], page_table, pos0,
+            k_scale=pool.get("ksp"), k_zero=pool.get("kzp"),
+            v_scale=pool.get("vsp"), window=window)
+        out = out.reshape(B, Sx, H, hd).astype(x.dtype)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+        return y, pool
     scale = hd ** -0.5
     quant = "ksp" in pool
     if quant:
@@ -720,12 +748,14 @@ def attn_block_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
 
 def attn_block_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
                       pos: jax.Array, kind: str = "attn",
-                      page_table: Optional[jax.Array] = None
+                      page_table: Optional[jax.Array] = None,
+                      impl: Optional[str] = None
                       ) -> Tuple[jax.Array, Dict]:
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if "kp" in cache:                                   # paged pool layer
         y, cache = attention_decode_paged(cfg, p["attn"], h, cache, pos,
-                                          page_table, block_window(cfg, kind))
+                                          page_table, block_window(cfg, kind),
+                                          impl=impl)
     else:
         y, cache = attention_decode(cfg, p["attn"], h, cache, pos,
                                     block_window(cfg, kind))
@@ -877,13 +907,14 @@ def attention_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
 def attn_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
                       pos0: jax.Array, kind: str = "attn",
                       valid: Optional[jax.Array] = None,
-                      page_table: Optional[jax.Array] = None
+                      page_table: Optional[jax.Array] = None,
+                      impl: Optional[str] = None
                       ) -> Tuple[jax.Array, Dict]:
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if "kp" in cache:                                   # paged pool layer
         y, cache = attention_extend_paged(cfg, p["attn"], h, cache, pos0,
                                           block_window(cfg, kind),
-                                          page_table, valid)
+                                          page_table, valid, impl=impl)
     else:
         y, cache = attention_extend(cfg, p["attn"], h, cache, pos0,
                                     block_window(cfg, kind), valid)

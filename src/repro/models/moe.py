@@ -171,12 +171,12 @@ def moe_block_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
 
 def moe_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
                      pos0: jax.Array, valid: Optional[jax.Array] = None,
-                     page_table=None):
+                     page_table=None, impl: Optional[str] = None):
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if "kp" in cache:                                   # paged pool layer
         y, cache = A.attention_extend_paged(cfg, p["attn"], h, cache, pos0,
                                             cfg.sliding_window, page_table,
-                                            valid)
+                                            valid, impl=impl)
     else:
         y, cache = A.attention_extend(cfg, p["attn"], h, cache, pos0,
                                       cfg.sliding_window, valid)
@@ -187,11 +187,13 @@ def moe_block_extend(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
 
 
 def moe_block_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict,
-                     pos: jax.Array, page_table=None):
+                     pos: jax.Array, page_table=None,
+                     impl: Optional[str] = None):
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if "kp" in cache:                                   # paged pool layer
         y, cache = A.attention_decode_paged(cfg, p["attn"], h, cache, pos,
-                                            page_table, cfg.sliding_window)
+                                            page_table, cfg.sliding_window,
+                                            impl=impl)
     else:
         y, cache = A.attention_decode(cfg, p["attn"], h, cache, pos,
                                       cfg.sliding_window)

@@ -229,13 +229,14 @@ class TransformerLM:
         raise ValueError(kind)
 
     def _apply_block_decode(self, kind: str, p, x, cache, pos,
-                            page_table=None):
+                            page_table=None, attn_impl=None):
         cfg = self.cfg
         if kind in ("attn", "rg_attn"):
             return A.attn_block_decode(cfg, p, x, cache, pos, kind,
-                                       page_table)
+                                       page_table, impl=attn_impl)
         if kind == "moe":
-            return MOE.moe_block_decode(cfg, p, x, cache, pos, page_table)
+            return MOE.moe_block_decode(cfg, p, x, cache, pos, page_table,
+                                        impl=attn_impl)
         if kind == "mamba":
             return M.mamba_block_decode(cfg, p, x, cache)
         if kind == "rglru":
@@ -243,14 +244,14 @@ class TransformerLM:
         raise ValueError(kind)
 
     def _apply_block_extend(self, kind: str, p, x, cache, pos0, valid=None,
-                            page_table=None):
+                            page_table=None, attn_impl=None):
         cfg = self.cfg
         if kind in ("attn", "rg_attn"):
             return A.attn_block_extend(cfg, p, x, cache, pos0, kind, valid,
-                                       page_table)
+                                       page_table, impl=attn_impl)
         if kind == "moe":
             return MOE.moe_block_extend(cfg, p, x, cache, pos0, valid,
-                                        page_table)
+                                        page_table, impl=attn_impl)
         if kind == "mamba":
             return M.mamba_block_extend(cfg, p, x, cache, valid)
         if kind == "rglru":
@@ -350,7 +351,8 @@ class TransformerLM:
                        pos0: jax.Array,
                        n_valid: Optional[jax.Array] = None,
                        page_table: Optional[jax.Array] = None,
-                       all_logits: bool = False
+                       all_logits: bool = False,
+                       attn_impl: Optional[str] = None
                        ) -> Tuple[jax.Array, PyTree]:
         """Prefill a token SUFFIX on top of a cached prefix.
 
@@ -380,6 +382,11 @@ class TransformerLM:
         grows with Sx, which is why verify steps use a narrow dedicated
         width (1 + ServeConfig.spec_tokens) rather than riding the wide
         prefill-chunk shape.
+
+        ``attn_impl`` (static; "pallas"/"xla"/None) selects how paged
+        attention layers READ the pool: the page-table-walking Pallas
+        extend kernel or the XLA gather densify (default).  Ignored by
+        the ring path and non-attention layers.
         """
         x = self.embed(params, tokens)
         valid = None
@@ -391,7 +398,7 @@ class TransformerLM:
             new_caches = []
             for kind, p, c in zip(self.unit, unit_params, unit_caches):
                 x, c = self._apply_block_extend(kind, p, x, c, pos0, valid,
-                                                page_table)
+                                                page_table, attn_impl)
                 new_caches.append(c)
             return x, tuple(new_caches)
 
@@ -403,7 +410,7 @@ class TransformerLM:
         tail_caches = []
         for kind, p, c in zip(self.tail, params["tail"], cache["tail"]):
             x, c = self._apply_block_extend(kind, p, x, c, pos0, valid,
-                                            page_table)
+                                            page_table, attn_impl)
             tail_caches.append(c)
         x = L.rmsnorm(params["ln_f"], x, self.cfg.norm_eps)
         if all_logits:
@@ -420,10 +427,13 @@ class TransformerLM:
 
     def decode_step(self, params: PyTree, cache: PyTree, tokens: jax.Array,
                     pos: jax.Array,
-                    page_table: Optional[jax.Array] = None
+                    page_table: Optional[jax.Array] = None,
+                    attn_impl: Optional[str] = None
                     ) -> Tuple[jax.Array, PyTree]:
         """tokens: [B,1] int32; pos: [B] absolute position of this token.
-        ``page_table`` ([B, NP]) selects the paged attention path."""
+        ``page_table`` ([B, NP]) selects the paged attention path;
+        ``attn_impl`` (static) its read implementation (see
+        ``prefill_extend``)."""
         x = self.embed(params, tokens)
 
         def unit_body(x, payload):
@@ -431,7 +441,7 @@ class TransformerLM:
             new_caches = []
             for kind, p, c in zip(self.unit, unit_params, unit_caches):
                 x, c = self._apply_block_decode(kind, p, x, c, pos,
-                                                page_table)
+                                                page_table, attn_impl)
                 new_caches.append(c)
             return x, tuple(new_caches)
 
@@ -442,7 +452,8 @@ class TransformerLM:
             x, scan_caches = unit_body(x, (params["scan"], cache["scan"]))
         tail_caches = []
         for kind, p, c in zip(self.tail, params["tail"], cache["tail"]):
-            x, c = self._apply_block_decode(kind, p, x, c, pos, page_table)
+            x, c = self._apply_block_decode(kind, p, x, c, pos, page_table,
+                                            attn_impl)
             tail_caches.append(c)
         x = L.rmsnorm(params["ln_f"], x, self.cfg.norm_eps)
         logits = self.unembed(params, x)

@@ -109,6 +109,12 @@ class Engine:
         # quantizes K/V pages at write time (scale sidecars travel with
         # their pages — docs/SERVING.md#quantized-kv-cache-int8).
         self.kv_dtype = scfg.kv_dtype or self.cfg.kv_dtype
+        # Paged-attention read implementation: Pallas page-table-walking
+        # kernels on TPU, XLA gather densify elsewhere (interpret-mode
+        # Pallas is a correctness tool, not a serving path).  Static per
+        # engine — it is baked into the jitted step closures below.
+        self.attn_impl = scfg.attn_impl or (
+            "pallas" if jax.default_backend() == "tpu" else "xla")
         if self.paged:
             ps = scfg.page_size
             self.pages_per_seq = -(-S // ps)
@@ -235,20 +241,22 @@ class Engine:
                             "spec_accepted": 0, "slo_rejections": 0}
 
         if self.paged:
+            impl = self.attn_impl
             self._decode = jax.jit(
                 lambda p, c, t, pos, pt: model.decode_step(
-                    p, c, t, pos, page_table=pt),
+                    p, c, t, pos, page_table=pt, attn_impl=impl),
                 donate_argnums=(1,))
             self._mixed = jax.jit(
                 lambda p, c, t, pos0, nv, pt: model.prefill_extend(
-                    p, c, t, pos0, n_valid=nv, page_table=pt),
+                    p, c, t, pos0, n_valid=nv, page_table=pt,
+                    attn_impl=impl),
                 donate_argnums=(1,))
             self._copy = jax.jit(self._copy_pages_fn, donate_argnums=(0,))
             if self.spec:
                 self._verify = jax.jit(
                     lambda p, c, t, pos0, nv, pt: model.prefill_extend(
                         p, c, t, pos0, n_valid=nv, page_table=pt,
-                        all_logits=True),
+                        all_logits=True, attn_impl=impl),
                     donate_argnums=(1,))
         else:
             self._decode = jax.jit(model.decode_step, donate_argnums=(1,))

@@ -22,16 +22,56 @@ def ramp_prompt(start: int, n: int) -> list:
     return [1] + list(range(start, start + n - 1))
 
 
+def _ramp_margin(model, params, *, probe_len: int = 40,
+                 min_context: int = 16) -> float:
+    """Worst-case greedy sharpness of the fitted successor function.
+
+    Teacher-forces a battery of ``ramp_prompt``-shaped sequences whose
+    starts tile the vocab and returns the MINIMUM logit margin
+    (correct-successor logit minus best-other logit) over all rows at
+    positions with at least ``min_context`` ramp tokens of context —
+    the regime where the parity fixtures actually generate (their
+    prompts are 32 tokens).  If every on-ramp context clears margin m,
+    greedy stays on the ramp and tolerates any cache perturbation whose
+    logit effect is below m/2 — which is the property int8-KV parity
+    assertions rely on.
+    """
+    vocab = model.cfg.vocab_size
+    starts = list(range(3, vocab - probe_len - 1, 29))
+    toks = jnp.asarray([[1] + list(range(s, s + probe_len - 1))
+                        for s in starts], jnp.int32)
+    logits, _ = model.forward(params, {"tokens": toks})
+    lg = logits[:, 1:-1].astype(jnp.float32)          # predict from ramp toks
+    tgt = toks[:, 2:]
+    hit = jnp.take_along_axis(lg, tgt[..., None], -1)[..., 0]
+    b = jnp.arange(toks.shape[0])[:, None]
+    s_ = jnp.arange(lg.shape[1])[None, :]
+    other = jnp.max(lg.at[b, s_, tgt].set(-1e30), axis=-1)
+    return float(jnp.min((hit - other)[:, min_context:]))
+
+
 def quick_fit_ramp(model, params, *, steps: int = 120, batch: int = 8,
-                   seq: int = 48, lr: float = 0.5, seed: int = 0):
+                   seq: int = 48, lr: float = 0.5, seed: int = 0,
+                   target_margin: float = 2.0, max_steps: int = None):
     """Returns params SGD-fitted so greedy continues ``ramp_prompt``s.
 
     Deterministic for a fixed (model, params, steps, seed): every caller
     gets the same fixture weights, so token-for-token assertions are
     reproducible across test/benchmark processes.
+
+    The fixture's contract is SHARPNESS, not step count: a fixed budget
+    that converges on one BLAS/arch build can land short of confident on
+    another (different float contraction orders change the optimum), and
+    a near-zero top-2 gap turns int8 parity checks into coin flips.  So
+    after the base ``steps`` the fit is extended in deterministic rounds
+    until the worst-case deep-context successor margin (``_ramp_margin``)
+    clears ``target_margin``, capped at ``max_steps`` (default
+    ``6 * steps``).  Environments where the base budget is already sharp
+    run zero extra rounds and get bit-identical fixtures to before.
     """
     vocab = model.cfg.vocab_size
     assert seq + 1 < vocab, "ramp sequences must fit the vocab"
+    max_steps = 6 * steps if max_steps is None else max_steps
 
     def loss_fn(p, toks):
         logits, _ = model.forward(p, {"tokens": toks})
@@ -44,12 +84,22 @@ def quick_fit_ramp(model, params, *, steps: int = 120, batch: int = 8,
         _, g = jax.value_and_grad(loss_fn)(p, toks)
         return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
 
+    def run(p, n, rng):
+        for _ in range(n):
+            starts = rng.integers(1, vocab - seq, batch)
+            toks = jnp.asarray(starts[:, None] + np.arange(seq)[None, :],
+                               jnp.int32)
+            p = step(p, toks)
+        return p
+
     rng = np.random.default_rng(seed)
-    for _ in range(steps):
-        starts = rng.integers(1, vocab - seq, batch)
-        toks = jnp.asarray(starts[:, None] + np.arange(seq)[None, :],
-                           jnp.int32)
-        params = step(params, toks)
+    params = run(params, steps, rng)
+    done = steps
+    round_ = max(steps // 2, 30)
+    while (done < max_steps
+           and _ramp_margin(model, params) < target_margin):
+        params = run(params, min(round_, max_steps - done), rng)
+        done += round_
     return params
 
 

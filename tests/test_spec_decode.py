@@ -156,6 +156,31 @@ def test_spec_parity_across_archs(arch, kv_dtype):
     assert outs[True] == outs[False], f"spec changed outputs for {arch}"
 
 
+def test_spec_parity_pallas_verify_path():
+    """The three-way pin behind ISSUE 7: spec-off XLA, spec-on XLA and
+    spec-on PALLAS (verify step runs through the fused paged-extend
+    kernel) must all emit identical greedy tokens — speculation and the
+    kernel swap are both output-invisible, independently and
+    composed."""
+    m, params = _setup()
+    outs = {}
+    for tag, spec, impl in (("ref", False, "xla"), ("xla", True, "xla"),
+                            ("pallas", True, "pallas")):
+        eng = Engine(m, params,
+                     ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                                 spec_decode=spec, spec_tokens=4,
+                                 attn_impl=impl))
+        r = Request(prompt=list(REP_PROMPT), max_new_tokens=8, eos_id=None)
+        eng.submit(r)
+        eng.run()
+        assert r.status == Status.DONE
+        if spec:
+            assert eng.model_steps["verify_steps"] > 0
+        eng.pool.check()
+        outs[tag] = list(r.output)
+    assert outs["pallas"] == outs["xla"] == outs["ref"], outs
+
+
 def test_spec_parity_ring_mode():
     """Non-paged (ring) engines speculate too when no ring is
     capacity-clamped; outputs must match the non-spec ring engine."""
