@@ -1,0 +1,271 @@
+"""Chaos soak: the serving/routing stack under deterministic fault
+injection (serving/faults.py).
+
+Three gated phases, all on the qwen3_0_6b smoke model:
+
+1. Engine soak — a mixed workload (tight / loose / no deadlines) runs
+   under a hostile FaultPlan (NaN logit rows, a stuck decode row, a
+   mid-run crash, latency spikes on a virtual clock).  Every request
+   must terminate with a DEFINITE stop_reason, billing must equal the
+   delivered output, PagePool invariants must hold with zero leaked
+   pages after a full prefix-cache drain, and a second run from
+   ``plan.clone()`` must be bit-for-bit identical.
+2. Zero-fault parity — a rate-0 plan with every hardening flag ON
+   (deadlines, NaN quarantine, stall detector) must be byte-identical
+   to the un-instrumented engine: same outputs, stop_reasons, usage.
+3. Circuit-breaker demo — a two-tier cascade whose LARGE tier fails 75%
+   of its rounds: with the breaker ON the router trips after
+   consecutive failures and degrades gracefully to the small tier
+   (+1 compensation round); with it OFF every request burns its
+   retries against the sick tier.  The gate asserts breaker-on goodput
+   >= breaker-off goodput and >= 1 trip, with zero exceptions escaping
+   the routed loop either way.
+
+Usage: PYTHONPATH=src python benchmarks/chaos.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+# terminal stop_reasons the engine is allowed to deliver under chaos
+DEFINITE = ("eos", "budget", "max_tokens", "slo", "timeout", "stalled",
+            "error")
+# of those, the ones that mean "the request got what it asked for"
+OK_STOPS = ("eos", "budget", "max_tokens")
+
+_SITES = ("engine.crash", "engine.latency", "engine.logits",
+          "engine.stuck", "backend.transient", "backend.garbage")
+
+
+def _build():
+    import jax
+
+    from repro.models.registry import build_model, get_smoke_config
+    cfg = get_smoke_config("qwen3_0_6b").replace(dtype="float32")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0)), m.init(jax.random.PRNGKey(1))
+
+
+def _scfg(**kw):
+    from repro.configs.base import ServeConfig
+    return ServeConfig(max_batch=4, max_seq=1024, page_size=16, **kw)
+
+
+def _hardened(**kw):
+    return _scfg(enforce_deadlines=True, nan_quarantine=True,
+                 nan_retry_limit=2, stall_limit=24, **kw)
+
+
+def _soak_workload(n: int) -> List[Tuple[List[int], int, Optional[float]]]:
+    """(prompt, max_new_tokens, max_latency_s) triples.  Deadlines are
+    VIRTUAL seconds (the plan's clock ticks 0.05/step): i%4==0 requests
+    get 0.4s — unfinishable at >=10 decode steps, guaranteed timeouts —
+    i%4==2 get a loose 8s, the rest run unconstrained."""
+    rng = np.random.default_rng(42)
+    out = []
+    for i in range(n):
+        plen = int(rng.integers(8, 28))
+        prompt = [1] + [int(t) for t in rng.integers(3, 250, plen)]
+        mx = int(rng.integers(10, 16)) if i % 4 == 0 \
+            else int(rng.integers(4, 14))
+        ml = 0.4 if i % 4 == 0 else (8.0 if i % 4 == 2 else None)
+        out.append((prompt, mx, ml))
+    return out
+
+
+def _hostile_plan():
+    from repro.serving.faults import FaultPlan, FaultSpec, VirtualClock
+    specs = [
+        FaultSpec("engine.logits", kind="nan", rate=0.10),
+        FaultSpec("engine.stuck", kind="stuck", rate=1.0, start=6,
+                  max_fires=1),
+        FaultSpec("engine.crash", kind="crash", rate=1.0, start=20,
+                  max_fires=1),
+        FaultSpec("engine.latency", kind="spike", rate=0.12,
+                  payload={"delay_s": 0.8}),
+    ]
+    return FaultPlan(specs, seed=17, clock=VirtualClock(tick_s=0.05))
+
+
+def _zero_plan():
+    from repro.serving.faults import FaultPlan, FaultSpec, VirtualClock
+    return FaultPlan([FaultSpec(site, rate=0.0) for site in _SITES],
+                     seed=17, clock=VirtualClock(tick_s=0.05))
+
+
+def _run_engine(model, params, scfg, workload, plan):
+    """Run one workload to completion; assert the universal invariants;
+    return a comparable fingerprint per request."""
+    from repro.serving.engine import Engine
+    from repro.serving.request import Request, Status
+
+    eng = Engine(model, params, scfg, faults=plan)
+    rr = [Request(prompt=list(p), max_new_tokens=mx, eos_id=None,
+                  max_latency_s=ml) for p, mx, ml in workload]
+    for r in rr:
+        eng.submit(r)
+    eng.run()
+    for r in rr:
+        assert r.status is Status.DONE, f"request {r.uid} never terminated"
+        assert r.stop_reason in DEFINITE, \
+            f"indefinite stop_reason {r.stop_reason!r}"
+        # billing == delivery: watermarked replay never double-bills,
+        # abnormal finalize freezes at the committed watermark
+        assert r.usage.output_tokens == len(r.output), \
+            (f"billed {r.usage.output_tokens} output tokens, delivered "
+             f"{len(r.output)} (stop={r.stop_reason})")
+    if eng.paged:
+        eng.pool.check()
+        if eng.prefix_cache is not None:
+            while eng.prefix_cache.evict_lru():
+                pass
+        assert eng.pool.used_pages == 0, \
+            f"{eng.pool.used_pages} pages leaked after drain"
+    fp = [(list(r.output), r.stop_reason,
+           (r.usage.input_tokens, r.usage.cache_read_tokens,
+            r.usage.cache_write_tokens, r.usage.output_tokens))
+          for r in rr]
+    return eng, fp
+
+
+class _HardTask:
+    """Always-wrong task: a truthful judge reports it wrong every round,
+    so a stable answer stalls and the cascade escalates."""
+    domain = "math500"
+
+    def prompt(self):
+        return ("What is 2 + 3? State your final answer in "
+                "<answer></answer> tags.")
+
+    def verify(self, response):
+        return False
+
+
+def _breaker_demo(model, params, large_params, n: int, threshold: int,
+                  cooldown: int):
+    """Stream ``n`` always-escalating requests at a cascade whose large
+    tier drops 75% of its rounds; returns (goodput, trips, degraded)."""
+    from repro.core.accounting import CostModel, LatencyModel
+    from repro.core.budget import InferenceStrategy
+    from repro.core.controller import ControllerConfig, SweetSpotController
+    from repro.core.feedback import LLMJudgeFeedback
+    from repro.core.reflection import (CascadeBackend, EngineBackend,
+                                       ReflectionController)
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.serving.engine import Engine
+    from repro.serving.faults import FaultPlan, FaultSpec
+
+    scfg = _scfg()
+    sick = FaultPlan([FaultSpec("backend.transient", rate=0.75)], seed=23)
+    backend = CascadeBackend(
+        EngineBackend(Engine(model, params, scfg), ByteTokenizer(),
+                      max_new_tokens=12),
+        EngineBackend(Engine(model, large_params, scfg), ByteTokenizer(),
+                      max_new_tokens=12, faults=sick))
+    router = SweetSpotController(
+        CostModel.for_model("nova_micro"),
+        LatencyModel.for_model("nova_micro"),
+        ControllerConfig(max_rounds=2, stable_delta=1.0,
+                         stop_on_stable=False, use_vote=False,
+                         escalate=False, cascade=True,
+                         cascade_after_stalls=1, warm_start=False,
+                         retry_max=1, retry_base_s=0.05,
+                         breaker_threshold=threshold,
+                         breaker_cooldown=cooldown),
+        tier_pricing={
+            "small": (CostModel.for_model("nova_micro"),
+                      LatencyModel.for_model("nova_micro")),
+            "large": (CostModel.for_model("sonnet37"),
+                      LatencyModel.for_model("sonnet37"))})
+    finished = degraded = 0
+    for _ in range(n):
+        ctrl = ReflectionController(
+            InferenceStrategy(2, feedback="judge"),
+            feedback=LLMJudgeFeedback(judge_accuracy=1.0, seed=0),
+            router=router)
+        # the whole point: the routed loop NEVER raises under faults
+        res = ctrl.run_task(backend, _HardTask(), slo=None)
+        assert res.stop_reason in ("finished", "slo", "degraded", "error",
+                                   "timeout"), res.stop_reason
+        finished += res.stop_reason == "finished"
+        degraded += res.stop_reason in ("degraded", "error")
+    stats = router.breaker_stats().get("large", {})
+    return finished / n, int(stats.get("trips", 0)), degraded
+
+
+def run(verbose: bool = True, smoke: bool = False):
+    n_soak = 8 if smoke else 14
+    n_breaker = 8 if smoke else 14
+    model, params, large_params = _build()
+
+    # ---- phase 1: engine soak + bit-reproducibility -----------------------
+    workload = _soak_workload(n_soak)
+    plan = _hostile_plan()
+    eng, fp = _run_engine(model, params, _hardened(), workload, plan)
+    assert plan.stats.get("engine.crash", 0) >= 1, "crash never fired"
+    assert plan.stats.get("engine.stuck", 0) >= 1, "stuck-row never fired"
+    assert plan.stats.get("engine.logits", 0) >= 1, "NaN fault never fired"
+    stops = [s for _, s, _ in fp]
+    assert stops.count("timeout") >= 1, f"no timeouts in {stops}"
+    goodput = sum(s in OK_STOPS for s in stops) / len(stops)
+    assert goodput > 0.0, "no request survived the soak"
+    _, fp2 = _run_engine(model, params, _hardened(), workload,
+                         plan.clone())
+    assert fp2 == fp, "chaos soak is not reproducible from (seed, plan)"
+    if verbose:
+        print(f"soak: {len(stops)} requests, stops="
+              f"{sorted(set(stops))}, goodput={goodput:.2f}, "
+              f"faults={plan.stats}, "
+              f"recoveries={eng.model_steps['crash_recoveries']}, "
+              f"quarantines={eng.model_steps['nan_quarantines']}")
+
+    # ---- phase 2: zero-fault parity ---------------------------------------
+    calm = [(p, mx, None) for p, mx, _ in workload]
+    _, fp_armed = _run_engine(model, params, _hardened(), calm,
+                              _zero_plan())
+    _, fp_plain = _run_engine(model, params, _scfg(), calm, None)
+    assert fp_armed == fp_plain, \
+        "rate-0 fault layer changed outputs/billing"
+    if verbose:
+        print("zero-fault parity: rate-0 plan + hardening flags are "
+              "byte-identical to the plain engine")
+
+    # ---- phase 3: circuit breaker on a sick large tier --------------------
+    g_off, trips_off, deg_off = _breaker_demo(
+        model, params, large_params, n_breaker,
+        threshold=10 ** 9, cooldown=4)
+    g_on, trips_on, deg_on = _breaker_demo(
+        model, params, large_params, n_breaker,
+        threshold=2, cooldown=4)
+    assert trips_off == 0
+    assert trips_on >= 1, "breaker never tripped on a 75%-failing tier"
+    assert g_on >= g_off, \
+        (f"breaker-on goodput {g_on:.2f} below breaker-off {g_off:.2f}: "
+         f"tripping made things worse")
+    if verbose:
+        print(f"breaker off: goodput={g_off:.2f} degraded={deg_off}"
+              f"/{n_breaker}")
+        print(f"breaker on:  goodput={g_on:.2f} degraded={deg_on}"
+              f"/{n_breaker} trips={trips_on}")
+
+    return [
+        ("chaos_soak_requests", 0.0, str(len(stops))),
+        ("chaos_goodput_under_faults", 0.0, f"{goodput:.2f}"),
+        ("chaos_faults_injected", 0.0, str(plan.fired_total)),
+        ("chaos_repro_bitexact", 0.0, "1"),
+        ("chaos_zero_fault_parity", 0.0, "1"),
+        ("chaos_breaker_off_goodput", 0.0, f"{g_off:.2f}"),
+        ("chaos_breaker_on_goodput", 0.0, f"{g_on:.2f}"),
+        ("chaos_breaker_trips", 0.0, str(trips_on)),
+    ]
+
+
+if __name__ == "__main__":
+    t0 = time.time()
+    for row in run(smoke="--smoke" in sys.argv):
+        print(",".join(map(str, row)))
+    print(f"chaos: OK ({time.time()-t0:.1f}s)")

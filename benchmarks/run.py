@@ -40,6 +40,7 @@ MODULES = [
     "benchmarks.speculative",
     "benchmarks.adaptive_router",
     "benchmarks.cascade",
+    "benchmarks.chaos",
 ]
 
 OUT_DIR = os.path.dirname(os.path.abspath(__file__))

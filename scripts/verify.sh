@@ -70,4 +70,12 @@ python benchmarks/adaptive_router.py --smoke
 echo "== smoke: benchmarks/cascade.py --smoke (cascade routing) =="
 python benchmarks/cascade.py --smoke
 
+# Chaos smoke: engine soak under a seeded hostile FaultPlan (every
+# request must terminate with a definite stop_reason, zero leaked
+# pages, bit-reproducible from the seed), rate-0 parity with the plain
+# engine, and the cascade circuit breaker degrading gracefully on a
+# 75%-failing large tier (goodput-under-faults rows asserted inside).
+echo "== smoke: benchmarks/chaos.py --smoke (fault injection) =="
+python benchmarks/chaos.py --smoke
+
 echo "verify: OK ($MODE)"

@@ -211,6 +211,28 @@ class ServeConfig:
     # (bit-identical to pre-SLO behavior).
     slo_price_model: Optional[str] = None
 
+    # ---- reliability (docs/SERVING.md#reliability) ------------------------
+    # Runtime deadline enforcement: at every step boundary, finalize any
+    # queued or in-flight request whose max_latency_s has elapsed since
+    # submit() (stop_reason "timeout", pages refcount-released, billing
+    # frozen at the committed watermark).  Time comes from the engine's
+    # clock — time.monotonic by default, or a FaultPlan's VirtualClock
+    # when one is installed, so chaos tests never sleep.
+    enforce_deadlines: bool = False
+    # Quarantine rows whose logits come back NaN/Inf: the row's commit is
+    # skipped and the request replays through the PR-2 preemption path
+    # (billed_prefill watermark → no double billing), up to
+    # nan_retry_limit times, after which it finalizes with stop_reason
+    # "error".  Off by default: the per-step finiteness check costs a
+    # device->host sync on the hot path.
+    nan_quarantine: bool = False
+    nan_retry_limit: int = 2
+    # Stall detector: if no slot makes progress (token commit, prefill
+    # advance, admission) for this many consecutive steps while rows are
+    # in flight, finalize the stuck rows with stop_reason "stalled"
+    # instead of silently spinning to run(max_steps).  0 disables.
+    stall_limit: int = 0
+
     # ---- chunked-prefill scheduler (docs/SERVING.md) ----------------------
     # Lane width of the mixed prefill+decode step: every scheduler tick
     # processes a [max_batch, prefill_chunk] token block; a decoding row

@@ -168,6 +168,62 @@ def vote_agreement(answers: List[Optional[str]]) -> float:
 # controller
 # ---------------------------------------------------------------------------
 
+class CircuitBreaker:
+    """Consecutive-failure circuit breaker for one cascade tier.
+
+    closed -> open after ``threshold`` consecutive recorded failures;
+    open denies ``allow()`` for ``cooldown`` calls, then half-opens and
+    lets probes through; a successful probe closes the breaker (failure
+    counter reset), a failed one re-opens it.  Half-open allows every
+    caller to probe — the routed loop is sequential per request, so a
+    "probe storm" is bounded by request concurrency, and the design can
+    never wedge waiting for a probe that was never executed (e.g. one
+    denied by the SLO instead of the breaker)."""
+
+    def __init__(self, threshold: int = 3, cooldown: int = 8):
+        self.threshold = max(1, threshold)
+        self.cooldown = max(1, cooldown)
+        self.state = "closed"            # closed | open | half_open
+        self.failures = 0                # consecutive failures
+        self._denied = 0                 # denials since the breaker opened
+        self.stats = {"trips": 0, "denials": 0, "probes": 0, "closes": 0,
+                      "failures": 0, "successes": 0}
+
+    def allow(self) -> bool:
+        """May the caller route to this tier right now?"""
+        if self.state == "closed":
+            return True
+        if self.state == "open":
+            self._denied += 1
+            self.stats["denials"] += 1
+            if self._denied >= self.cooldown:
+                self.state = "half_open"
+                self.stats["probes"] += 1
+                return True
+            return False
+        self.stats["probes"] += 1        # half_open: probe
+        return True
+
+    def record(self, ok: bool) -> None:
+        """Outcome of a round actually executed on this tier."""
+        if ok:
+            self.stats["successes"] += 1
+            if self.state != "closed":
+                self.stats["closes"] += 1
+            self.state = "closed"
+            self.failures = 0
+            self._denied = 0
+        else:
+            self.stats["failures"] += 1
+            self.failures += 1
+            if self.state == "half_open" or (self.state == "closed"
+                                             and self.failures
+                                             >= self.threshold):
+                self.stats["trips"] += 1
+                self.state = "open"
+                self._denied = 0
+
+
 @dataclass
 class ControllerConfig:
     max_rounds: int = 3              # hard reflection ceiling per request
@@ -180,6 +236,24 @@ class ControllerConfig:
     escalate_after_stalls: int = 2   # stable-but-INCORRECT rounds before escalating
     cascade: bool = False            # allow small->large model escalation
     cascade_after_stalls: int = 2    # stalled rounds before a model hop
+    # ---- reliability (docs/SERVING.md#reliability) ----------------------
+    # Transient-failure retries in the routed engine loop: a round that
+    # ends in "error"/"stalled" is retried up to retry_max times with
+    # exponential backoff (retry_base_s * 2^attempt, jittered by up to
+    # retry_jitter), each delay priced against the request's remaining
+    # latency SLO — an unfundable retry degrades instead (best committed
+    # round, stop_reason "degraded", never an exception).
+    retry_max: int = 2
+    retry_base_s: float = 0.5
+    retry_jitter: float = 0.25       # uniform multiplicative jitter fraction
+    retry_seed: int = 0              # jitter rng seed (deterministic chaos)
+    # Circuit breaker on escalation-target tiers: breaker_threshold
+    # consecutive failed large-tier rounds trip it open; while open,
+    # escalate_model falls back to the small tier with one extra
+    # reflection round granted; after breaker_cooldown denials a
+    # half-open probe is let through.
+    breaker_threshold: int = 3
+    breaker_cooldown: int = 8
     warm_start: bool = True          # consult the online frontier for planning
     min_obs: int = 8                 # per-(domain,strategy) observations needed
     # simulated-backend knobs (core/reflection.py::route_simulated):
@@ -213,9 +287,31 @@ class SweetSpotController:
         # (domain, model_tier, strategy) -> [n, sum_q, sum_cost, sum_lat]
         self._stats: Dict[Tuple[str, str, str], List[float]] = {}
         self._domain_obs: Dict[str, int] = {}
+        # per-tier circuit breakers (escalation targets only); a closed
+        # breaker is free — allow() touches no state — so cascade routing
+        # without failures is byte-identical to the pre-breaker policy
+        self.breakers: Dict[str, CircuitBreaker] = {}
 
     def _models(self, model_tier: str) -> Tuple[CostModel, LatencyModel]:
         return self.tier_pricing.get(model_tier, (self.cm, self.lm))
+
+    # ---------------- circuit breaking ------------------------------------
+
+    def _breaker(self, model_tier: str) -> CircuitBreaker:
+        return self.breakers.setdefault(
+            model_tier, CircuitBreaker(self.cfg.breaker_threshold,
+                                       self.cfg.breaker_cooldown))
+
+    def record_tier_result(self, model_tier: str, ok: bool) -> None:
+        """Feed a round outcome on ``model_tier`` into its breaker.  Only
+        escalation-target tiers are tracked: the base tier has no
+        fallback, so a breaker there could only deny service."""
+        if model_tier in _NEXT_MODEL.values():
+            self._breaker(model_tier).record(ok)
+
+    def breaker_stats(self) -> Dict[str, Dict]:
+        return {t: {"state": b.state, **b.stats}
+                for t, b in self.breakers.items()}
 
     # ---------------- warm start ------------------------------------------
 
@@ -278,7 +374,8 @@ class SweetSpotController:
                spend: TokenUsage, next_round: TokenUsage,
                planned_rounds: Optional[int] = None, *,
                spent_cost_usd: Optional[float] = None,
-               spent_latency_s: Optional[float] = None) -> Decision:
+               spent_latency_s: Optional[float] = None,
+               extra_rounds: int = 0) -> Decision:
         """One stop/reflect/escalate decision after a completed round.
 
         ``spend`` is the request's cumulative usage; ``next_round`` the
@@ -304,8 +401,12 @@ class SweetSpotController:
                             cost, lat, pred_c, pred_l,
                             model_tier=signals.model_tier)
 
-        cap = cfg.max_rounds if planned_rounds is None \
-            else min(planned_rounds, cfg.max_rounds)
+        # ``extra_rounds`` is the breaker-fallback grant: a request whose
+        # escalation was denied by an open breaker gets one round past
+        # its plan (the fallback strategy is small tier + one extra
+        # reflection), so the cap can exceed max_rounds by that grant
+        cap = (cfg.max_rounds if planned_rounds is None
+               else min(planned_rounds, cfg.max_rounds)) + extra_rounds
         if signals.round_idx >= cap:
             return mk("stop", "round-cap", signals.tier)
         if slo is not None and not slo.admits(cost + pred_c, lat + pred_l):
@@ -354,6 +455,12 @@ class SweetSpotController:
                 output_tokens=next_round.output_tokens)
             esc_c, esc_l = ncm.cost(esc), nlm.latency(esc)
             if slo is None or slo.admits(cost + esc_c, lat + esc_l):
+                # breaker check comes AFTER the SLO admits, so a denial
+                # here always means "tier is sick", and a granted
+                # half-open probe is always actually executed (the loop
+                # records its outcome, re-opening or closing the breaker)
+                if not self._breaker(nxt_model).allow():
+                    return mk("reflect", "breaker-fallback", signals.tier)
                 return Decision("escalate_model", "stalled-wrong-model",
                                 signals.round_idx, signals.tier.value,
                                 cost, lat, esc_c, esc_l,

@@ -56,6 +56,18 @@ class ReflectionResult:
     usage: TokenUsage = field(default_factory=TokenUsage)
     # routed path only: one controller Decision per completed round
     trace: List[Decision] = field(default_factory=list)
+    # How the request terminated (docs/SERVING.md#reliability):
+    #   "finished" — normal stop decision or round cap;
+    #   "slo"      — the engine refused to fund a round;
+    #   "timeout"  — the deadline elapsed mid-round (partial round kept);
+    #   "degraded" — retries exhausted/unfundable, best committed round
+    #                returned;
+    #   "error"    — failed before any round committed.
+    # Failed rounds' billed tokens are absorbed into ``usage`` (spend is
+    # monotone and honest), so under faults ``usage`` can exceed the sum
+    # of the committed rounds' usages.
+    stop_reason: str = "finished"
+    retries: int = 0                 # transient-fault retries performed
 
     @property
     def final(self) -> RoundRecord:
@@ -76,10 +88,16 @@ class EngineBackend:
     chunked-prefill mixed steps instead of serializing whole prefills.
     """
 
-    def __init__(self, engine, tokenizer, max_new_tokens: int = 64):
+    def __init__(self, engine, tokenizer, max_new_tokens: int = 64,
+                 faults=None):
         self.engine = engine
         self.tok = tokenizer
         self.max_new_tokens = max_new_tokens
+        # Backend-level fault injection (serving/faults.py): the
+        # "backend.transient" and "backend.garbage" sites.  Independent
+        # of any plan installed on the engine itself; None (default) and
+        # rate-0 plans are byte-identical to the uninstrumented backend.
+        self.faults = faults
         # per-conversation raw draft tokens from prior rounds, fed to the
         # engine's n-gram speculator (Request.spec_context): round r+1
         # mostly re-emits round r's answer ("First Try Matters"), so the
@@ -148,17 +166,39 @@ class EngineBackend:
                       ) -> List[Tuple[str, TokenUsage]]:
         """Submit a batch of (conversation, conversation_id) and poll the
         engine until all are done — their prefill chunks and decode steps
-        interleave inside the engine's mixed steps."""
+        interleave inside the engine's mixed steps.
+
+        Per-request error isolation: a request the engine rejects at
+        submit (empty prompt, unfundable budget) or that hits an injected
+        backend fault finishes with stop_reason "error" — the rest of the
+        batch completes normally; this method never raises for a single
+        bad request."""
         reqs = [self._request(c, cid, budget, ceilings, external_draft)
                 for c, cid in conversations]
         self.last_requests = reqs
         for r in reqs:
+            if (self.faults is not None
+                    and self.faults.fire("backend.transient") is not None):
+                r.status = Status.DONE
+                r.stop_reason = "error"
+                r.error = "injected transient backend fault"
+                continue
             self.engine.submit(r)
         pending = set(r.uid for r in reqs)
         while pending:
             self.engine.poll()
             done = {r.uid for r in reqs if r.status is Status.DONE}
             pending -= done
+            if pending and not any(uid in self.engine.requests
+                                   for uid in pending):
+                # the engine no longer tracks them and they never
+                # finished: surface as per-request errors, never hang
+                for r in reqs:
+                    if r.uid in pending:
+                        r.status = Status.DONE
+                        r.stop_reason = "error"
+                        r.error = "request lost by engine"
+                pending.clear()
         for (_, cid), r in zip(conversations, reqs):
             # remember this round's raw draft for the next round's
             # speculator (latest round per conversation; LRU-evicted).
@@ -169,7 +209,15 @@ class EngineBackend:
                 self._prior_drafts.move_to_end(cid)
                 while len(self._prior_drafts) > self._prior_drafts_max:
                     self._prior_drafts.popitem(last=False)
-        return [(self._decode_output(r), r.usage) for r in reqs]
+        out = []
+        for r in reqs:
+            text = self._decode_output(r)
+            if self.faults is not None:
+                # "backend.garbage": a corrupted round output is absorbed
+                # as a bad round by the reflection loop, never an error
+                text = self.faults.corrupt_text("backend.garbage", text)
+            out.append((text, r.usage))
+        return out
 
 
 class SimulatedBackend:
@@ -278,6 +326,9 @@ class ReflectionController:
         self.strategy = strategy
         self.feedback = feedback or NoFeedback()
         self.router = router
+        # retry-backoff jitter stream (routed engine path only); lazily
+        # seeded from the router config so chaos runs are deterministic
+        self._retry_rng: Optional[np.random.Generator] = None
 
     # ---------------- real-engine path -----------------------------------
 
@@ -317,18 +368,23 @@ class ReflectionController:
         return min(backend.max_new_tokens, caps[tier])
 
     def _remaining(self, slo: Optional[SLO], usage: TokenUsage,
-                   spent: Optional[Tuple[float, float]] = None
+                   spent: Optional[Tuple[float, float]] = None,
+                   extra_latency_s: float = 0.0
                    ) -> Tuple[Optional[float], Optional[float]]:
         """Ceilings minus spend so far — the per-round Request ceilings
         the engine's SLO admission checks against.  Dollars and seconds
         are model-agnostic, so a cascade caller whose spend spans two
         price books passes the exact priced totals via ``spent``;
-        single-tier callers price the cumulative usage as before."""
+        single-tier callers price the cumulative usage as before.
+        ``extra_latency_s`` adds latency the usage cannot carry — retry
+        backoff delays — for single-tier callers (cascade callers fold
+        delays into ``spent`` directly)."""
         if slo is None:
             return (None, None)
         router = self.router
-        c, lt = spent if spent is not None else (router.cm.cost(usage),
-                                                 router.lm.latency(usage))
+        c, lt = spent if spent is not None else (
+            router.cm.cost(usage),
+            router.lm.latency(usage) + extra_latency_s)
         rc = (None if slo.max_cost_usd is None
               else max(0.0, slo.max_cost_usd - c))
         rl = (None if slo.max_latency_s is None
@@ -392,11 +448,21 @@ class ReflectionController:
         prev_response: Optional[str] = None
         stalls = 0
         idx = 0
+        # reliability state (docs/SERVING.md#reliability): per-round
+        # transient-retry attempts, cumulative backoff latency (counted
+        # against the latency SLO — the usage cannot carry it), and the
+        # one-shot extra-round grant of a breaker fallback
+        if self._retry_rng is None:
+            self._retry_rng = np.random.default_rng(router.cfg.retry_seed)
+        attempts = 0
+        retry_lat = 0.0
+        fb_bonus = 0
         while True:
             response, usage, req = bk.complete_routed(
                 convo, cid, next_tier,
                 self._remaining(slo, result.usage,
-                                (spent_c, spent_l) if cascade else None),
+                                (spent_c, spent_l) if cascade else None,
+                                extra_latency_s=retry_lat),
                 external_draft=pending_draft)
             pending_draft = None
             cm_t, lm_t = router._models(model_tier)
@@ -417,11 +483,78 @@ class ReflectionController:
                     rec.get("pred_cost_usd", 0.0),
                     rec.get("pred_latency_s", 0.0),
                     model_tier=model_tier))
+                result.stop_reason = "slo"
                 if idx == 0:
                     result.rounds.append(RoundRecord(response, usage,
                                                      correct=False))
                     return result
                 break
+            if req.stop_reason == "timeout":
+                # the deadline elapsed mid-round: whatever partial output
+                # the engine committed before freezing billing IS this
+                # round's answer — record it, bill it, and stop.  A
+                # timeout is terminal (retrying cannot buy back wall
+                # time), and it counts against the tier's breaker.
+                result.usage += usage
+                spent_c += cm_t.cost(usage)
+                spent_l += lm_t.latency(usage)
+                router.record_tier_result(model_tier, False)
+                result.rounds.append(RoundRecord(
+                    response, usage, correct=bool(task.verify(response))))
+                result.trace.append(Decision(
+                    "stop", "timeout", idx, next_tier.value,
+                    spent_c if cascade else router.cm.cost(result.usage),
+                    spent_l if cascade else (router.lm.latency(result.usage)
+                                             + retry_lat),
+                    0.0, 0.0, model_tier=model_tier))
+                result.stop_reason = "timeout"
+                break
+            if req.stop_reason in ("error", "stalled"):
+                # transient failure: the round produced nothing usable,
+                # but its tokens were still spent — bill them, then retry
+                # the SAME round with exponential backoff, pricing each
+                # retry's delay against the remaining latency SLO.  An
+                # unfundable or exhausted retry degrades to the best
+                # committed round (stop_reason "degraded") — the caller
+                # NEVER sees an exception from the routed loop.
+                result.usage += usage
+                spent_c += cm_t.cost(usage)
+                spent_l += lm_t.latency(usage)
+                router.record_tier_result(model_tier, False)
+                delay = (router.cfg.retry_base_s * (2 ** attempts)
+                         * (1.0 + router.cfg.retry_jitter
+                            * float(self._retry_rng.random())))
+                _, rl = self._remaining(slo, result.usage,
+                                        (spent_c, spent_l) if cascade
+                                        else None,
+                                        extra_latency_s=retry_lat)
+                fundable = rl is None or delay <= rl
+                if attempts < router.cfg.retry_max and fundable:
+                    attempts += 1
+                    result.retries += 1
+                    retry_lat += delay
+                    if cascade:
+                        spent_l += delay
+                    req.decision_trace.append({
+                        "action": "retry", "attempt": attempts,
+                        "delay_s": delay, "cause": req.stop_reason})
+                    # re-issue the identical conversation: the prefix
+                    # cache makes the replay a near-pure cache hit
+                    continue
+                result.stop_reason = ("degraded" if result.rounds
+                                      else "error")
+                if not result.rounds:
+                    result.rounds.append(RoundRecord("", TokenUsage(),
+                                                     correct=False))
+                result.trace.append(Decision(
+                    "stop", result.stop_reason, idx, next_tier.value,
+                    spent_c if cascade else router.cm.cost(result.usage),
+                    spent_l if cascade else (router.lm.latency(result.usage)
+                                             + retry_lat),
+                    0.0, 0.0, model_tier=model_tier))
+                break
+            attempts = 0
+            router.record_tier_result(model_tier, True)
             tier = next_tier
             rec = RoundRecord(response, usage,
                               correct=bool(task.verify(response)))
@@ -460,15 +593,32 @@ class ReflectionController:
                               cache_write_tokens=ntok - cached_est,
                               output_tokens=bk.max_new_tokens)
             if cascade:
+                # retry delays were folded into spent_l as they accrued
                 decision = router.decide(signals, slo, result.usage, pred,
                                          planned_rounds=planned,
                                          spent_cost_usd=spent_c,
-                                         spent_latency_s=spent_l)
+                                         spent_latency_s=spent_l,
+                                         extra_rounds=fb_bonus)
+            elif retry_lat > 0.0:
+                # single-tier with backoff spent: price the usage as
+                # usual but surface the retry wall-time to the SLO check
+                decision = router.decide(
+                    signals, slo, result.usage, pred,
+                    planned_rounds=planned,
+                    spent_cost_usd=router.cm.cost(result.usage),
+                    spent_latency_s=(router.lm.latency(result.usage)
+                                     + retry_lat),
+                    extra_rounds=fb_bonus)
             else:
                 decision = router.decide(signals, slo, result.usage, pred,
-                                         planned_rounds=planned)
+                                         planned_rounds=planned,
+                                         extra_rounds=fb_bonus)
             result.trace.append(decision)
             req.decision_trace.append(decision.key())
+            if decision.reason == "breaker-fallback" and fb_bonus == 0:
+                # the breaker denied an escalation: grant the small tier
+                # ONE extra reflection round in compensation (once)
+                fb_bonus = 1
             if decision.action == "stop":
                 break
             if decision.action == "escalate_model":
@@ -493,14 +643,19 @@ class ReflectionController:
             prev_response = response
             convo = next_convo
             idx += 1
-        if cascade:
-            router.observe(domain, result.rounds_run, tier,
-                           100.0 * bool(result.final.correct), result.usage,
-                           model_tier=model_tier,
-                           cost_usd=spent_c, latency_s=spent_l)
-        else:
-            router.observe(domain, result.rounds_run, tier,
-                           100.0 * bool(result.final.correct), result.usage)
+        if result.stop_reason in ("finished", "slo"):
+            # backend-failure outcomes (timeout/degraded/error) say
+            # nothing about the strategy's quality — keep them out of
+            # the frontier the planner learns from
+            if cascade:
+                router.observe(domain, result.rounds_run, tier,
+                               100.0 * bool(result.final.correct),
+                               result.usage, model_tier=model_tier,
+                               cost_usd=spent_c, latency_s=spent_l)
+            else:
+                router.observe(domain, result.rounds_run, tier,
+                               100.0 * bool(result.final.correct),
+                               result.usage)
         return result
 
     # ---------------- simulated path (paper reproduction) ----------------

@@ -65,8 +65,9 @@ analysis reproduces.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -88,11 +89,25 @@ COPY_BATCH = 8      # COW page copies applied per jitted scatter call
 
 
 class Engine:
-    def __init__(self, model, params: PyTree, scfg: ServeConfig):
+    def __init__(self, model, params: PyTree, scfg: ServeConfig,
+                 faults=None, clock: Optional[Callable[[], float]] = None):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
         self.scfg = scfg
+        # Deterministic fault injection (serving/faults.py).  None (the
+        # default) and a rate-0 plan are both bit-identical to the
+        # un-instrumented engine — pinned by tests/test_faults.py.
+        self.faults = faults
+        # Clock for deadline enforcement: wall time by default, the fault
+        # plan's VirtualClock when one is installed (chaos tests advance
+        # time explicitly instead of sleeping).
+        if clock is not None:
+            self.clock = clock
+        elif faults is not None:
+            self.clock = faults.clock
+        else:
+            self.clock = time.monotonic
         B, S = scfg.max_batch, scfg.max_seq
 
         # single source of truth shared with the prefix cache: recurrent
@@ -231,6 +246,11 @@ class Engine:
         self._ff_version = -1   # prefix-cache version at last fast-forward
         self._admit_counter = 0
         self._pending_copies: List[Tuple[int, int]] = []   # COW (src, dst)
+        # Stall detector state: _progress_seq bumps on every commit /
+        # prefill advance / admission / finalize; a step that moves it
+        # nowhere while rows are in flight counts toward stall_limit.
+        self._progress_seq = 0
+        self._no_progress = 0
         self.model_steps = {"prefill_tokens": 0, "extend_tokens": 0,
                             "decode_steps": 0, "decode_batch_steps": 0,
                             "decode_tokens": 0,
@@ -238,7 +258,10 @@ class Engine:
                             "max_step_prefill_tokens": 0, "preemptions": 0,
                             "starved_mixed_steps": 0,
                             "verify_steps": 0, "spec_drafted": 0,
-                            "spec_accepted": 0, "slo_rejections": 0}
+                            "spec_accepted": 0, "slo_rejections": 0,
+                            "timeouts": 0, "stalls": 0, "errors": 0,
+                            "nan_quarantines": 0, "crash_recoveries": 0,
+                            "stuck_rows": 0}
 
         if self.paged:
             impl = self.attn_impl
@@ -273,7 +296,25 @@ class Engine:
     # ------------------------------------------------------------------ API
 
     def submit(self, req: Request) -> int:
-        """Enqueue a request (non-blocking).  Returns its uid for poll()."""
+        """Enqueue a request (non-blocking).  Returns its uid for poll().
+
+        Malformed requests — empty prompt, or a prompt + budget cap that
+        cannot fit in max_seq — finalize immediately with stop_reason
+        "error" instead of poisoning the batch: they surface through
+        poll()/finished like any other completion, and the rest of the
+        batch is unaffected.
+        """
+        req.submitted_at = self.clock()
+        if not req.prompt:
+            self._finalize_abnormal(req, None, "error", "empty prompt")
+            return req.uid
+        if len(req.prompt) + self._budget_cap(req) >= self.scfg.max_seq:
+            self._finalize_abnormal(
+                req, None, "error",
+                f"prompt ({len(req.prompt)}) + budget cap "
+                f"({self._budget_cap(req)}) would overflow "
+                f"max_seq ({self.scfg.max_seq})")
+            return req.uid
         self.queue.append(req)
         self.requests[req.uid] = req
         return req.uid
@@ -422,7 +463,10 @@ class Engine:
         the admission queue.  Its generated tokens survive: re-admission
         replays prompt+output, restoring the decode state exactly."""
         req = self.slots[slot]
-        self._release_slot_pages(slot)
+        if self.paged:
+            # ring mode reaches here only via NaN quarantine; the slot's
+            # dense cache is reset at re-admission
+            self._release_slot_pages(slot)
         if req.status is Status.DECODING:
             # decode positions were billed as output; the replay must not
             # re-bill them as input (prefilling victims keep their mark:
@@ -606,9 +650,136 @@ class Engine:
              "max_cost_usd": req.max_cost_usd,
              "max_latency_s": req.max_latency_s})
         self.model_steps["slo_rejections"] += 1
+        self._progress_seq += 1
         self.finished.append(req)
         self.requests.pop(req.uid, None)
         return True
+
+    # ------------------------------------------- reliability (faults.py)
+
+    def _finalize_abnormal(self, req: Request, slot: Optional[int],
+                           reason: str, detail: Optional[str] = None) -> None:
+        """Terminal finalize outside the normal eos/budget path: billing
+        stays frozen at the committed watermark (nothing here touches
+        usage), pages are refcount-released, and the caller sees a
+        definite stop_reason ("timeout" / "stalled" / "error")."""
+        req.status = Status.DONE
+        req.stop_reason = reason
+        if detail is not None:
+            req.error = detail
+        rec = {"action": "finalize", "reason": reason}
+        if detail is not None:
+            rec["detail"] = detail
+        req.decision_trace.append(rec)
+        self.model_steps[{"timeout": "timeouts", "stalled": "stalls",
+                          "error": "errors"}[reason]] += 1
+        self._progress_seq += 1
+        self.finished.append(req)
+        self.requests.pop(req.uid, None)
+        if slot is not None:
+            if self.paged:
+                self._release_slot_pages(slot)
+            self.slots[slot] = None
+
+    def _enforce_deadlines(self) -> None:
+        """Finalize every queued or in-flight request whose max_latency_s
+        has elapsed (stop_reason "timeout").  Partial output survives;
+        billing was only ever advanced at committed watermarks, so a
+        timed-out request is billed exactly the work it received."""
+        now = self.clock()
+
+        def expired(r: Request) -> bool:
+            return (r.max_latency_s is not None
+                    and r.submitted_at is not None
+                    and now - r.submitted_at > r.max_latency_s)
+
+        if any(expired(r) for r in self.queue):
+            keep: deque[Request] = deque()
+            while self.queue:
+                r = self.queue.popleft()
+                if expired(r):
+                    self._finalize_abnormal(r, None, "timeout")
+                else:
+                    keep.append(r)
+            self.queue = keep
+        for slot, r in enumerate(self.slots):
+            if r is not None and expired(r):
+                self._finalize_abnormal(r, slot, "timeout")
+
+    def _nonfinite_rows(self, logits, rows: List[int],
+                        nv: Optional[np.ndarray] = None,
+                        ndraft: Optional[np.ndarray] = None) -> List[int]:
+        """Rows (among ``rows``) whose CONSUMED logit lanes are not
+        finite.  Lanes that are never consumed — nv=0 no-op lanes,
+        verify-step padding past nv — are excluded: fully masked
+        attention can legitimately produce NaN there."""
+        if not rows or not self.scfg.nan_quarantine:
+            return []
+        fin = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+        bad = []
+        for s in rows:
+            if fin.ndim == 1:
+                ok = bool(fin[s])
+            elif ndraft is not None and ndraft[s] > 0:
+                # verify window: lanes [0, nv) are scored for acceptance
+                ok = bool(fin[s, :nv[s]].all())
+            else:
+                ok = bool(fin[s, nv[s] - 1])
+            if not ok:
+                bad.append(s)
+        return bad
+
+    def _quarantine_rows(self, bad: List[int]) -> None:
+        """Non-finite logits: skip the row's commit this step and replay
+        it through the PR-2 preemption path (prefix-cache snapshots +
+        billed_prefill watermark mean no recomputed token is ever billed
+        twice).  Bounded per request by nan_retry_limit, after which the
+        request finalizes with stop_reason "error"."""
+        for slot in bad:
+            req = self.slots[slot]
+            if req is None:
+                continue
+            req.nan_retries += 1
+            self.model_steps["nan_quarantines"] += 1
+            req.decision_trace.append(
+                {"action": "fault", "kind": "nan_quarantine",
+                 "retries": req.nan_retries})
+            if req.nan_retries > self.scfg.nan_retry_limit:
+                self._finalize_abnormal(
+                    req, slot, "error",
+                    "non-finite logits persisted past nan_retry_limit")
+            else:
+                self._preempt_slot(slot)
+
+    def _mark_stuck(self) -> None:
+        """Fault hook ("engine.stuck"): one decoding row stops committing
+        tokens — its lane still runs, nothing lands.  Reaped by the stall
+        detector (or its own deadline)."""
+        rows = [i for i, r in enumerate(self.slots)
+                if r is not None and r.status is Status.DECODING
+                and not r.stuck]
+        if not rows:
+            return
+        req = self.slots[rows[self.faults.pick(len(rows))]]
+        req.stuck = True
+        self.model_steps["stuck_rows"] += 1
+        req.decision_trace.append({"action": "fault", "kind": "stuck"})
+
+    def _crash_recover(self) -> None:
+        """Simulated mid-run crash ("engine.crash"): in-flight device
+        state is lost at a step boundary.  Recovery preempts every
+        occupied slot — replay re-adopts prefix-cache snapshots where
+        they exist and recomputes the rest, while billed_prefill
+        watermarks guarantee no token is billed twice.  Queue order is
+        preserved: victims requeue at the front, oldest first."""
+        self.model_steps["crash_recoveries"] += 1
+        occupied = [i for i, r in enumerate(self.slots) if r is not None]
+        # appendleft per victim: preempt youngest-first so the oldest
+        # admission ends up at the head of the queue
+        for slot in sorted(occupied,
+                           key=lambda i: -self.slots[i].admit_seq):
+            self._preempt_slot(slot)
+        self._no_progress = 0
 
     def _admit(self, req: Request, slot: int) -> None:
         """Assign a queued request to a free slot.  No model work happens
@@ -648,6 +819,7 @@ class Engine:
         self._admit_counter += 1
         req.admit_seq = self._admit_counter
         self.slots[slot] = req
+        self._progress_seq += 1
 
     def _maybe_finish(self, slot: int) -> None:
         req = self.slots[slot]
@@ -733,7 +905,7 @@ class Engine:
         same way prefill chunks are bounded."""
         drafts: Dict[int, List[int]] = {}
         for slot, req in enumerate(self.slots):
-            if req is None or req.status is not Status.DECODING:
+            if req is None or req.status is not Status.DECODING or req.stuck:
                 continue
             # rem bounds the draft so at most one lane is wasted at the
             # cap (emission stops exactly at the cap — _postprocess_verify
@@ -823,6 +995,7 @@ class Engine:
                              sampled: np.ndarray) -> None:
         req = self.slots[slot]
         target = req.prefill_target
+        self._progress_seq += 1
         req.prefill_pos += n
         req.prefill_chunks += 1
         req.prefill_steps += 1
@@ -864,6 +1037,7 @@ class Engine:
 
     def _postprocess_decode(self, slot: int, sampled: np.ndarray) -> None:
         req = self.slots[slot]
+        self._progress_seq += 1
         tok = int(sampled[slot])
         req.output.append(tok)
         req.usage.output_tokens += 1
@@ -901,6 +1075,7 @@ class Engine:
         all committed), so no snapshot can ever pin a rolled-back
         position as reusable content."""
         req = self.slots[slot]
+        self._progress_seq += 1
         P = int(self.pos[slot])
         req.spec_drafted += drafted
         req.spec_accepted += n_emit - 1
@@ -928,7 +1103,43 @@ class Engine:
             self._free_out_of_window(slot, int(self.pos[slot]))
 
     def step(self) -> bool:
-        """One scheduler tick.  Returns False when fully idle."""
+        """One scheduler tick.  Returns False when fully idle.
+
+        Reliability wrapper around the scheduling core (_step_inner):
+        fault hooks fire at the step boundary (crash, stuck-row, latency
+        spikes via the plan's virtual clock), expired deadlines finalize
+        before any new work is planned, and the stall detector reaps
+        in-flight rows after stall_limit consecutive no-progress steps —
+        all gated off by default (docs/SERVING.md#reliability)."""
+        if self.faults is not None:
+            self.faults.on_step()
+            if self.faults.fire("engine.crash") is not None:
+                self._crash_recover()
+                return (bool(self.queue)
+                        or any(r is not None for r in self.slots))
+            if self.faults.fire("engine.stuck") is not None:
+                self._mark_stuck()
+        if self.scfg.enforce_deadlines:
+            self._enforce_deadlines()
+        p0 = self._progress_seq
+        busy = self._step_inner()
+        if self.scfg.stall_limit > 0:
+            if (self._progress_seq == p0
+                    and any(r is not None for r in self.slots)):
+                self._no_progress += 1
+                if self._no_progress >= self.scfg.stall_limit:
+                    for slot, r in enumerate(self.slots):
+                        if r is not None:
+                            self._finalize_abnormal(r, slot, "stalled")
+                    self._no_progress = 0
+                    busy = (bool(self.queue)
+                            or any(r is not None for r in self.slots))
+            else:
+                self._no_progress = 0
+        return busy
+
+    def _step_inner(self) -> bool:
+        """The scheduling core: admission, planning, one model call."""
         # admit queued requests into free slots (no model work yet);
         # SLO-unfundable requests finalize without consuming a slot
         for slot in range(len(self.slots)):
@@ -1001,8 +1212,15 @@ class Engine:
                                   else self._decode(*args))
             self.model_steps["decode_batch_steps"] += 1
             self.model_steps["decode_steps"] += len(decode_rows)
+            if self.faults is not None:
+                logits = self.faults.corrupt_logits("engine.logits", logits,
+                                                    decode_rows)
+            self._quarantine_rows(self._nonfinite_rows(logits, decode_rows))
             sampled = self._sample_rows(logits)
             for slot in decode_rows:
+                req = self.slots[slot]
+                if req is None or req.stuck:   # quarantined / fault-stuck
+                    continue
                 self._postprocess_decode(slot, sampled)
             return True
 
@@ -1030,10 +1248,20 @@ class Engine:
         self.model_steps["max_step_prefill_tokens"] = max(
             self.model_steps["max_step_prefill_tokens"],
             int(sum(plan.values())))
+        consumed = decode_rows + list(plan)
+        if self.faults is not None:
+            logits = self.faults.corrupt_logits("engine.logits", logits,
+                                                consumed)
+        self._quarantine_rows(self._nonfinite_rows(logits, consumed))
         sampled = self._sample_rows(logits)
         for slot, n in plan.items():
+            if self.slots[slot] is None:       # quarantined this step
+                continue
             self._postprocess_prefill(slot, n, sampled)
         for slot in decode_rows:
+            req = self.slots[slot]
+            if req is None or req.stuck:
+                continue
             self._postprocess_decode(slot, sampled)
         return True
 
@@ -1076,6 +1304,12 @@ class Engine:
         self.model_steps["max_step_prefill_tokens"] = max(
             self.model_steps["max_step_prefill_tokens"],
             int(sum(plan.values())))
+        consumed = decode_rows + list(plan)
+        if self.faults is not None:
+            logits_all = self.faults.corrupt_logits("engine.logits",
+                                                    logits_all, consumed)
+        self._quarantine_rows(
+            self._nonfinite_rows(logits_all, consumed, nv=nv, ndraft=ndraft))
         temps = np.zeros(B, np.float32)
         for i, r in enumerate(self.slots):
             if r is not None:
@@ -1089,8 +1323,13 @@ class Engine:
         # prefill rows: emit[:, 0] is the sample at their last valid lane
         # (n_draft=0 rows verify nothing), exactly _sample_rows' output
         for slot, n in plan.items():
+            if self.slots[slot] is None:       # quarantined this step
+                continue
             self._postprocess_prefill(slot, n, emit[:, 0])
         for slot in decode_rows:
+            req = self.slots[slot]
+            if req is None or req.stuck:
+                continue
             self._postprocess_verify(slot, int(n_emit[slot]), emit[slot],
                                      int(ndraft[slot]))
         return True

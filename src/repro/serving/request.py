@@ -74,6 +74,24 @@ class Request:
     prefill_steps: int = 0
     decode_steps: int = 0
     stop_reason: Optional[str] = None
+    # Human-readable failure detail when stop_reason is "error"
+    # (malformed request, exhausted NaN quarantine, backend fault, ...).
+    error: Optional[str] = None
+
+    # ---- reliability (docs/SERVING.md#reliability) ------------------
+    # Engine clock reading at submit(); with ServeConfig.enforce_deadlines
+    # a request whose max_latency_s elapses mid-flight is finalized with
+    # stop_reason "timeout" (pages released, billing frozen at the
+    # committed watermark).
+    submitted_at: Optional[float] = None
+    # Times this request's logits came back non-finite and the row was
+    # quarantined (preempt + replay); past ServeConfig.nan_retry_limit the
+    # request is finalized with stop_reason "error".
+    nan_retries: int = 0
+    # Fault-injection state (serving/faults.py "engine.stuck"): a stuck
+    # row's commits are suppressed so it makes no progress — the stall
+    # detector (ServeConfig.stall_limit) is what reaps it.
+    stuck: bool = False
 
     # chunked-prefill scheduling state (owned by the engine)
     prefill_pos: int = 0        # prompt tokens already in the slot cache

@@ -495,3 +495,62 @@ def test_cascade_off_engine_parity(model_setup):
     assert ra.usage == rb.usage
     # the large engine never saw a request
     assert cascade_backend.large.engine.model_steps["prefill_tokens"] == 0
+
+
+# ---------------------------------------------------------------------------
+# fault-heavy chaos fuzz (serving/faults.py): random fault schedules —
+# NaN logit rows, stuck rows, a mid-run crash, latency spikes against
+# random deadlines — must never produce an indefinite outcome, leak a
+# page, or bill a token that wasn't delivered.  Plain seeded cases (no
+# hypothesis dependency): the schedules are already the random input.
+# ---------------------------------------------------------------------------
+
+DEFINITE_STOPS = ("eos", "budget", "max_tokens", "slo", "timeout",
+                  "stalled", "error")
+
+
+def _chaos_case(model_setup, seed):
+    from repro.serving.faults import FaultPlan, FaultSpec, VirtualClock
+    rng = np.random.default_rng(seed)
+    plan = FaultPlan([
+        FaultSpec("engine.logits", rate=float(rng.uniform(0.0, 0.2))),
+        FaultSpec("engine.latency", rate=float(rng.uniform(0.0, 0.2)),
+                  payload={"delay_s": float(rng.uniform(0.1, 1.0))}),
+        FaultSpec("engine.crash", rate=1.0,
+                  start=int(rng.integers(3, 25)), max_fires=1),
+        FaultSpec("engine.stuck", rate=1.0,
+                  start=int(rng.integers(3, 15)), max_fires=1),
+    ], seed=seed, clock=VirtualClock(tick_s=0.05))
+    model, params = model_setup
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=3, max_seq=128, page_size=8,
+                             enforce_deadlines=True, nan_quarantine=True,
+                             nan_retry_limit=2, stall_limit=12),
+                 faults=plan)
+    rr = []
+    for _ in range(int(rng.integers(3, 7))):
+        plen = int(rng.integers(1, 24))
+        ml = float(rng.uniform(0.3, 4.0)) if rng.random() < 0.4 else None
+        rr.append(Request(
+            prompt=[1] + [int(t) for t in rng.integers(3, 250, plen)],
+            max_new_tokens=int(rng.integers(1, 10)), eos_id=None,
+            max_latency_s=ml))
+    for r in rr:
+        eng.submit(r)
+    eng.run()
+    for r in rr:
+        assert r.status is Status.DONE, "request never terminated"
+        assert r.stop_reason in DEFINITE_STOPS, r.stop_reason
+        assert r.usage.output_tokens == len(r.output), \
+            "billing diverged from delivered output under faults"
+    # pool invariants + zero leaked pages after a full cache drain
+    eng.pool.check()
+    if eng.prefix_cache is not None:
+        while eng.prefix_cache.evict_lru():
+            pass
+    assert eng.pool.used_pages == 0, "pages leaked under faults"
+
+
+def test_engine_chaos_fuzz(model_setup):
+    for seed in (0, 1, 2, 3):
+        _chaos_case(model_setup, seed)

@@ -1,0 +1,589 @@
+"""Fault-injection layer (serving/faults.py) + reliability hardening:
+deterministic schedules, rate-0 bit-parity, runtime deadlines, NaN
+quarantine, stall detection, crash recovery, per-request error
+isolation, retry/backoff and the cascade circuit breaker.
+
+Host-only tests (FaultPlan, CircuitBreaker, routed-loop retry policy on
+a scripted backend) run in the fast loop; engine-integration tests are
+marked ``slow`` and share one smoke-model fixture.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import ServeConfig
+from repro.core.accounting import CostModel, LatencyModel
+from repro.core.budget import InferenceStrategy
+from repro.core.controller import (CircuitBreaker, ControllerConfig,
+                                   RoundSignals, SLO, SweetSpotController,
+                                   trace_key)
+from repro.core.feedback import LLMJudgeFeedback
+from repro.core.reflection import (CascadeBackend, EngineBackend,
+                                   ReflectionController)
+from repro.serving.faults import FaultPlan, FaultSpec, VirtualClock
+from repro.serving.request import (BudgetTier, Request, Status,
+                                   TokenUsage)
+
+ALL_SITES = ("engine.crash", "engine.latency", "engine.logits",
+             "engine.stuck", "backend.transient", "backend.garbage")
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan (host-only)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic():
+    """Same (seed, schedule) -> identical fire sequence; a different
+    seed diverges.  clone() replays identically."""
+    specs = [FaultSpec("engine.logits", rate=0.3),
+             FaultSpec("backend.transient", rate=0.2)]
+
+    def seq(plan):
+        return [(plan.fire("engine.logits") is not None,
+                 plan.fire("backend.transient") is not None)
+                for _ in range(200)]
+
+    a = FaultPlan(specs, seed=5)
+    b = FaultPlan(specs, seed=5)
+    sa = seq(a)
+    assert sa == seq(b)
+    assert sa == seq(a.clone())
+    assert sa != seq(FaultPlan(specs, seed=6))
+    assert a.fired_total == sum(x + y for x, y in sa)
+
+
+def test_fault_plan_rate_zero_is_noop():
+    plan = FaultPlan([FaultSpec(s, rate=0.0) for s in ALL_SITES], seed=1)
+    sentinel = object()
+    for _ in range(50):
+        for s in ALL_SITES:
+            assert plan.fire(s) is None
+    # corruption helpers return their inputs UNCHANGED (same object)
+    assert plan.corrupt_text("backend.garbage", "hello") == "hello"
+    assert plan.corrupt_logits("engine.logits", sentinel, [0]) is sentinel
+    plan.raise_transient("backend.transient")   # must not raise
+    assert plan.fired_total == 0
+
+
+def test_fault_plan_one_shot_schedule():
+    """rate=1, start=k, max_fires=1 fires exactly at the k-th
+    opportunity and never again."""
+    plan = FaultPlan([FaultSpec("engine.crash", rate=1.0, start=5,
+                                max_fires=1)], seed=0)
+    fires = [plan.fire("engine.crash") is not None for _ in range(20)]
+    assert fires == [i == 5 for i in range(20)]
+
+
+def test_virtual_clock():
+    clk = VirtualClock(tick_s=0.25)
+    assert clk() == 0.0
+    clk.tick()
+    clk.advance(1.0)
+    assert clk() == pytest.approx(1.25)
+    with pytest.raises(AssertionError):
+        clk.advance(-1.0)
+
+
+def test_fault_plan_latency_spike_advances_clock():
+    plan = FaultPlan([FaultSpec("engine.latency", rate=1.0, max_fires=2,
+                                payload={"delay_s": 0.5})],
+                     seed=0, clock=VirtualClock(tick_s=0.1))
+    for _ in range(4):
+        plan.on_step()
+    # 4 ticks + 2 one-shot spikes
+    assert plan.clock() == pytest.approx(4 * 0.1 + 2 * 0.5)
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker (host-only)
+# ---------------------------------------------------------------------------
+
+def test_circuit_breaker_lifecycle():
+    b = CircuitBreaker(threshold=2, cooldown=3)
+    assert b.allow() and b.state == "closed"
+    b.record(False)
+    assert b.state == "closed"          # 1 failure < threshold
+    b.record(False)
+    assert b.state == "open" and b.stats["trips"] == 1
+    # open: denies for cooldown-1 calls, then half-opens a probe
+    assert not b.allow()
+    assert not b.allow()
+    assert b.allow() and b.state == "half_open"
+    assert b.stats["denials"] == 3 and b.stats["probes"] == 1
+    # failed probe re-trips; successful probe closes + resets
+    b.record(False)
+    assert b.state == "open" and b.stats["trips"] == 2
+    for _ in range(3):
+        b.allow()
+    b.record(True)
+    assert b.state == "closed" and b.failures == 0
+    assert b.stats["closes"] == 1
+    # a success streak keeps intermittent failures from tripping
+    for _ in range(5):
+        b.record(False)
+        b.record(True)
+    assert b.state == "closed"
+
+
+def _cascade_router(**cfg_kw):
+    kw = dict(cascade=True, cascade_after_stalls=1, warm_start=False)
+    kw.update(cfg_kw)
+    return SweetSpotController(
+        CostModel.for_model("nova_micro"),
+        LatencyModel.for_model("nova_micro"),
+        ControllerConfig(**kw),
+        tier_pricing={
+            "small": (CostModel.for_model("nova_micro"),
+                      LatencyModel.for_model("nova_micro")),
+            "large": (CostModel.for_model("sonnet37"),
+                      LatencyModel.for_model("sonnet37"))})
+
+
+def _stalled_signals(idx=1):
+    return RoundSignals(round_idx=idx, answer_delta=0.0, verdict=False,
+                        stalls=2, tier=BudgetTier.NONE, model_tier="small")
+
+
+def test_breaker_fallback_decision():
+    """An open large-tier breaker turns escalate_model into a
+    reflect/"breaker-fallback" decision; extra_rounds extends the cap
+    by the compensation grant."""
+    router = _cascade_router(breaker_threshold=2)
+    spend = TokenUsage(input_tokens=200, output_tokens=100)
+    pred = TokenUsage(input_tokens=300, output_tokens=100)
+    d = router.decide(_stalled_signals(), None, spend, pred)
+    assert d.action == "escalate_model"
+    # trip the large tier
+    router.record_tier_result("large", False)
+    router.record_tier_result("large", False)
+    d = router.decide(_stalled_signals(), None, spend, pred)
+    assert (d.action, d.reason) == ("reflect", "breaker-fallback")
+    assert d.model_tier == "small"
+    st = router.breaker_stats()["large"]
+    assert st["state"] == "open" and st["trips"] == 1
+    # the fallback grant: idx == max_rounds would stop without it
+    mr = router.cfg.max_rounds
+    assert router.decide(_stalled_signals(mr), None, spend,
+                         pred).action == "stop"
+    assert router.decide(_stalled_signals(mr), None, spend, pred,
+                         extra_rounds=1).action != "stop"
+    # small tier is not on the ladder's target side: never tracked
+    router.record_tier_result("small", False)
+    assert "small" not in router.breaker_stats()
+
+
+def test_breaker_denial_only_counts_fundable_escalations():
+    """The breaker is consulted AFTER the SLO admits the hop, so a
+    denial always means "tier sick", never "could not afford it" —
+    and unexecuted grants can never wedge the half-open state."""
+    router = _cascade_router(breaker_threshold=1, breaker_cooldown=2)
+    router.record_tier_result("large", False)     # trip
+    spend = TokenUsage(input_tokens=200, output_tokens=100)
+    pred = TokenUsage(input_tokens=300, output_tokens=100)
+    # unfundable hop: SLO stops the request before the breaker is asked
+    slo = SLO(max_cost_usd=1e-9)
+    d = router.decide(_stalled_signals(), slo, spend, pred)
+    assert d.action == "stop" and d.reason == "slo"
+    assert router.breaker_stats()["large"]["denials"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Routed-loop retry/degrade policy on a scripted backend (host-only)
+# ---------------------------------------------------------------------------
+
+class _FakeTok:
+    eos_id = 2
+
+    def encode(self, s):
+        return [1 + (ord(c) % 200) for c in s] or [1]
+
+    def decode(self, toks):
+        return "x" * len(toks)
+
+
+class _FakeEngine:
+    cost_model = None
+    latency_model = None
+
+
+class _Task:
+    domain = "math500"
+
+    def prompt(self):
+        return "What is 2 + 3? <answer></answer> please."
+
+    def verify(self, response):
+        return False
+
+
+class _FakeBackend:
+    """EngineBackend stand-in driven by a script of
+    (stop_reason, response_text) per complete_routed call."""
+
+    def __init__(self, script):
+        self.script = list(script)
+        self.engine = _FakeEngine()
+        self.tok = _FakeTok()
+        self.max_new_tokens = 8
+        self.calls = 0
+
+    def complete_routed(self, convo, cid, budget, ceilings=(None, None),
+                        external_draft=None):
+        self.calls += 1
+        stop, text = (self.script.pop(0) if self.script
+                      else ("max_tokens", "<answer>5</answer>"))
+        req = Request(prompt=[1, 2, 3])
+        req.status = Status.DONE
+        req.stop_reason = stop
+        if stop in ("error", "stalled"):
+            req.error = "scripted fault"
+        usage = (TokenUsage() if stop == "error"
+                 else TokenUsage(input_tokens=10, output_tokens=5))
+        return text, usage, req
+
+
+def _routed_ctrl(**cfg_kw):
+    kw = dict(retry_base_s=0.5, retry_jitter=0.25, warm_start=False)
+    kw.update(cfg_kw)
+    router = SweetSpotController(
+        CostModel.for_model("nova_micro"),
+        LatencyModel.for_model("nova_micro"), ControllerConfig(**kw))
+    return ReflectionController(InferenceStrategy(3), router=router)
+
+
+def test_retry_transient_then_success():
+    bk = _FakeBackend([("error", "")])
+    res = _routed_ctrl().run_task(bk, _Task(), slo=None)
+    assert res.stop_reason == "finished"
+    assert res.retries == 1
+    assert res.rounds and res.final.response == "<answer>5</answer>"
+    assert res.trace[-1].action == "stop"
+    assert len(res.trace) == res.rounds_run + 1
+
+
+def test_retry_exhaustion_without_committed_round_is_error():
+    bk = _FakeBackend([("error", "")] * 10)
+    res = _routed_ctrl(retry_max=2).run_task(bk, _Task(), slo=None)
+    assert res.stop_reason == "error"
+    assert res.retries == 2
+    assert bk.calls == 3                       # 1 try + 2 retries
+    assert res.rounds_run == 0
+    assert res.final.response == "" and res.final.correct is False
+    assert res.trace == [res.trace[-1]]        # exactly the stop decision
+    assert res.trace[-1].reason == "error"
+
+
+def test_retry_exhaustion_degrades_to_best_committed_round():
+    bk = _FakeBackend([("max_tokens", "<answer>5</answer>")]
+                      + [("stalled", "")] * 10)
+    res = _routed_ctrl(retry_max=1).run_task(bk, _Task(), slo=None)
+    assert res.stop_reason == "degraded"
+    assert res.retries == 1
+    assert res.final.response == "<answer>5</answer>"
+    assert res.trace[-1].reason == "degraded"
+    # one decision per committed round, plus the terminal stop standing
+    # in for the round that never committed
+    assert len(res.trace) == len(res.rounds) + 1
+    assert all(d.action != "stop" for d in res.trace[:-1])
+    # failed rounds' tokens are still billed: usage exceeds the sum of
+    # committed rounds (stalled rounds billed 15 tokens each)
+    committed = TokenUsage()
+    for r in res.rounds:
+        committed += r.usage
+    assert res.usage.input_tokens > committed.input_tokens
+
+
+def test_timeout_is_terminal_and_keeps_partial_round():
+    bk = _FakeBackend([("timeout", "partial")])
+    res = _routed_ctrl().run_task(bk, _Task(), slo=None)
+    assert res.stop_reason == "timeout"
+    assert res.retries == 0 and bk.calls == 1
+    assert res.final.response == "partial"
+    assert res.trace[-1].reason == "timeout"
+
+
+def test_retry_unfundable_against_latency_slo_degrades():
+    """A backoff delay the remaining latency ceiling cannot fund is not
+    taken: the loop degrades instead of sleeping through the SLO."""
+    lm = LatencyModel.for_model("nova_micro")
+    # ceiling: enough headroom past round 0 that the controller reflects
+    # into round 1, but far under the (huge) backoff delay
+    lat0 = lm.latency(TokenUsage(input_tokens=10, output_tokens=5))
+    slo = SLO(max_latency_s=lat0 + 3.0)
+    bk = _FakeBackend([("max_tokens", "<answer>5</answer>"),
+                       ("error", "")])
+    res = _routed_ctrl(retry_max=5, retry_base_s=50.0).run_task(
+        bk, _Task(), slo=slo)
+    assert res.stop_reason == "degraded"
+    assert res.retries == 0                    # delay was never fundable
+    assert res.final.response == "<answer>5</answer>"
+
+
+def test_retry_backoff_is_seeded_deterministic():
+    def run():
+        bk = _FakeBackend([("max_tokens", "<answer>5</answer>"),
+                           ("error", ""), ("error", "")])
+        res = _routed_ctrl(retry_max=2, retry_seed=9).run_task(
+            bk, _Task(), slo=None)
+        return trace_key(res.trace), res.retries
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# Engine integration (slow: shared smoke-model fixture)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model_setup():
+    import jax
+
+    from repro.models.registry import build_model, get_smoke_config
+    cfg = get_smoke_config("qwen3_0_6b").replace(dtype="float32")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _mk_engine(model_setup, scfg, faults=None):
+    from repro.serving.engine import Engine
+    model, params = model_setup
+    return Engine(model, params, scfg, faults=faults)
+
+
+def _fingerprint(reqs):
+    return [(list(r.output), r.stop_reason,
+             (r.usage.input_tokens, r.usage.cache_read_tokens,
+              r.usage.cache_write_tokens, r.usage.output_tokens))
+            for r in reqs]
+
+
+PROMPT_A = [1] + list(range(10, 30))
+PROMPT_B = [1] + list(range(40, 55))
+
+
+@pytest.mark.slow
+def test_stall_detector_reaps_stuck_row(model_setup):
+    """A stuck decode row finalizes "stalled" after stall_limit
+    no-progress steps; its batchmate is unaffected."""
+    plan = FaultPlan([FaultSpec("engine.stuck", rate=1.0, start=4,
+                                max_fires=1)], seed=0)
+    eng = _mk_engine(model_setup,
+                     ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                                 stall_limit=6),
+                     faults=plan)
+    rr = [Request(prompt=list(PROMPT_A), max_new_tokens=8, eos_id=None),
+          Request(prompt=list(PROMPT_B), max_new_tokens=8, eos_id=None)]
+    for r in rr:
+        eng.submit(r)
+    eng.run()
+    stops = sorted(r.stop_reason for r in rr)
+    assert stops == ["max_tokens", "stalled"]
+    assert eng.model_steps["stuck_rows"] == 1
+    assert eng.model_steps["stalls"] == 1
+    healthy = next(r for r in rr if r.stop_reason == "max_tokens")
+    assert len(healthy.output) == 8
+    stuck = next(r for r in rr if r.stop_reason == "stalled")
+    assert any(rec.get("kind") == "stuck"
+               for rec in stuck.decision_trace
+               if isinstance(rec, dict))
+    eng.pool.check()
+
+
+@pytest.mark.slow
+def test_deadline_timeout_mid_flight(model_setup):
+    """A request whose max_latency_s elapses mid-decode stops with
+    "timeout", keeps its partial output, and is billed exactly what it
+    received.  Time comes from the plan's virtual clock (rate-0 specs:
+    the clock is the only active piece)."""
+    plan = FaultPlan([FaultSpec(s, rate=0.0) for s in ALL_SITES],
+                     seed=0, clock=VirtualClock(tick_s=0.5))
+    eng = _mk_engine(model_setup,
+                     ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                                 prefix_cache=False,
+                                 enforce_deadlines=True),
+                     faults=plan)
+    doomed = Request(prompt=list(PROMPT_A), max_new_tokens=16,
+                     eos_id=None, max_latency_s=2.0)
+    free = Request(prompt=list(PROMPT_B), max_new_tokens=16, eos_id=None)
+    for r in (doomed, free):
+        eng.submit(r)
+    eng.run()
+    assert doomed.stop_reason == "timeout"
+    assert 0 < len(doomed.output) < 16
+    assert doomed.usage.output_tokens == len(doomed.output)
+    assert free.stop_reason == "max_tokens" and len(free.output) == 16
+    assert eng.model_steps["timeouts"] == 1
+    eng.pool.check()
+    assert eng.pool.used_pages == 0
+
+
+@pytest.mark.slow
+def test_nan_quarantine_replays_bit_identical(model_setup):
+    """One injected NaN logit row: the row is quarantined, replayed via
+    the preemption path, and the final output is bit-identical to the
+    fault-free run with identical billing."""
+    scfg = ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                       nan_quarantine=True, nan_retry_limit=2)
+
+    def run(plan):
+        eng = _mk_engine(model_setup, scfg, faults=plan)
+        r = Request(prompt=list(PROMPT_A), max_new_tokens=8, eos_id=None)
+        eng.submit(r)
+        eng.run()
+        eng.pool.check()
+        return eng, r
+
+    _, ref = run(None)
+    plan = FaultPlan([FaultSpec("engine.logits", rate=1.0, start=3,
+                                max_fires=1)], seed=0)
+    eng, r = run(plan)
+    assert plan.stats["engine.logits"] == 1
+    assert eng.model_steps["nan_quarantines"] == 1
+    assert r.preemptions >= 1
+    assert r.stop_reason == "max_tokens"
+    assert list(r.output) == list(ref.output)
+    assert r.usage.output_tokens == ref.usage.output_tokens == 8
+
+
+@pytest.mark.slow
+def test_nan_quarantine_exhaustion_errors(model_setup):
+    """Persistent non-finite logits exhaust nan_retry_limit and
+    finalize with "error" instead of looping forever."""
+    plan = FaultPlan([FaultSpec("engine.logits", rate=1.0)], seed=0)
+    eng = _mk_engine(model_setup,
+                     ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                                 nan_quarantine=True, nan_retry_limit=1),
+                     faults=plan)
+    r = Request(prompt=list(PROMPT_A), max_new_tokens=8, eos_id=None)
+    eng.submit(r)
+    eng.run()
+    assert r.stop_reason == "error"
+    assert "non-finite" in r.error
+    assert r.nan_retries == 2                  # limit + the fatal one
+    eng.pool.check()
+
+
+@pytest.mark.slow
+def test_crash_recovery_bit_identical(model_setup):
+    """A mid-run crash preempts every in-flight row; replay from
+    prefix-cache snapshots + billed watermarks reproduces the
+    fault-free outputs and billing exactly."""
+    scfg = ServeConfig(max_batch=2, max_seq=128, page_size=8)
+
+    def run(plan):
+        eng = _mk_engine(model_setup, scfg, faults=plan)
+        rr = [Request(prompt=list(PROMPT_A), max_new_tokens=8,
+                      eos_id=None),
+              Request(prompt=list(PROMPT_B), max_new_tokens=8,
+                      eos_id=None)]
+        for r in rr:
+            eng.submit(r)
+        eng.run()
+        eng.pool.check()
+        return eng, _fingerprint(rr), rr
+
+    _, ref, _ = run(None)
+    plan = FaultPlan([FaultSpec("engine.crash", rate=1.0, start=5,
+                                max_fires=1)], seed=0)
+    eng, got, rr = run(plan)
+    assert eng.model_steps["crash_recoveries"] == 1
+    assert sum(r.preemptions for r in rr) >= 1
+    assert got == ref
+
+
+@pytest.mark.slow
+def test_submit_isolates_malformed_requests(model_setup):
+    """Empty and overflow prompts finalize "error" at submit; the
+    healthy request in the same batch completes normally."""
+    eng = _mk_engine(model_setup,
+                     ServeConfig(max_batch=2, max_seq=64, page_size=8))
+    bad_empty = Request(prompt=[], max_new_tokens=4)
+    bad_big = Request(prompt=list(range(1, 61)), max_new_tokens=8,
+                      eos_id=None)
+    good = Request(prompt=list(PROMPT_B), max_new_tokens=4, eos_id=None)
+    for r in (bad_empty, bad_big, good):
+        eng.submit(r)
+    eng.run()
+    assert bad_empty.stop_reason == "error" and "empty" in bad_empty.error
+    assert bad_big.stop_reason == "error" and "overflow" in bad_big.error
+    assert good.stop_reason == "max_tokens" and len(good.output) == 4
+    assert eng.model_steps["errors"] == 2
+    eng.pool.check()
+    assert eng.pool.used_pages == 0 or eng.prefix_cache is not None
+
+
+@pytest.mark.slow
+def test_backend_transient_isolated_per_request(model_setup):
+    """An injected transient backend fault fails ONE request of a
+    complete_many batch; the others complete normally."""
+    from repro.data.tokenizer import ByteTokenizer
+    eng = _mk_engine(model_setup,
+                     ServeConfig(max_batch=4, max_seq=256, page_size=8))
+    plan = FaultPlan([FaultSpec("backend.transient", rate=1.0, start=1,
+                                max_fires=1)], seed=0)
+    bk = EngineBackend(eng, ByteTokenizer(), max_new_tokens=6,
+                       faults=plan)
+    out = bk.complete_many([("what is 2+2?", "c0"),
+                            ("what is 3+3?", "c1"),
+                            ("what is 4+4?", "c2")], BudgetTier.NONE)
+    stops = [r.stop_reason for r in bk.last_requests]
+    assert stops[1] == "error"
+    assert bk.last_requests[1].error == "injected transient backend fault"
+    assert stops[0] != "error" and stops[2] != "error"
+    assert out[1][0] == "" and out[1][1] == TokenUsage()
+    assert len(out[0][0]) > 0 and len(out[2][0]) > 0
+
+
+@pytest.mark.slow
+def test_zero_fault_layer_is_bit_identical(model_setup):
+    """Rate-0 plan + every hardening flag ON == plain engine, byte for
+    byte: outputs, stop_reasons, billing."""
+    def run(hardened):
+        scfg = (ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                            enforce_deadlines=True, nan_quarantine=True,
+                            stall_limit=16) if hardened
+                else ServeConfig(max_batch=2, max_seq=128, page_size=8))
+        plan = (FaultPlan([FaultSpec(s, rate=0.0) for s in ALL_SITES],
+                          seed=3, clock=VirtualClock(tick_s=0.01))
+                if hardened else None)
+        eng = _mk_engine(model_setup, scfg, faults=plan)
+        rr = [Request(prompt=list(PROMPT_A), max_new_tokens=6,
+                      eos_id=None),
+              Request(prompt=list(PROMPT_B), max_new_tokens=6,
+                      eos_id=None)]
+        for r in rr:
+            eng.submit(r)
+        eng.run()
+        return _fingerprint(rr), plan
+
+    ref, _ = run(False)
+    got, plan = run(True)
+    assert got == ref
+    assert plan.fired_total == 0
+
+
+@pytest.mark.slow
+def test_routed_zero_fault_parity(model_setup):
+    """Rate-0 fault layer through the FULL routed loop (engine + backend
+    + controller): decision traces, responses and usage are identical
+    to running without the layer."""
+    from repro.data.tokenizer import ByteTokenizer
+
+    def run(with_layer):
+        scfg = ServeConfig(max_batch=2, max_seq=1024, page_size=32)
+        plan = (FaultPlan([FaultSpec(s, rate=0.0) for s in ALL_SITES],
+                          seed=0) if with_layer else None)
+        eng = _mk_engine(model_setup, scfg, faults=plan)
+        bk = EngineBackend(eng, ByteTokenizer(), max_new_tokens=12,
+                           faults=plan)
+        router = SweetSpotController(
+            CostModel.for_model("nova_micro"),
+            LatencyModel.for_model("nova_micro"),
+            ControllerConfig(max_rounds=2, warm_start=False))
+        ctrl = ReflectionController(
+            InferenceStrategy(2, feedback="judge"),
+            feedback=LLMJudgeFeedback(judge_accuracy=1.0, seed=0),
+            router=router)
+        res = ctrl.run_task(bk, _Task(), slo=None)
+        return (trace_key(res.trace), [r.response for r in res.rounds],
+                res.usage, res.stop_reason, res.retries)
+
+    assert run(False) == run(True)
