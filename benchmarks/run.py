@@ -41,6 +41,7 @@ MODULES = [
     "benchmarks.adaptive_router",
     "benchmarks.cascade",
     "benchmarks.chaos",
+    "benchmarks.sharded_serve",
 ]
 
 OUT_DIR = os.path.dirname(os.path.abspath(__file__))

@@ -78,4 +78,13 @@ python benchmarks/cascade.py --smoke
 echo "== smoke: benchmarks/chaos.py --smoke (fault injection) =="
 python benchmarks/chaos.py --smoke
 
+# Sharded-parity smoke: a 1x2 host mesh (the module spawns its own child
+# with XLA_FLAGS=--xla_force_host_platform_device_count=8 — the flag
+# must precede jax init) must serve greedy outputs bit-identical to
+# single-device with paged + int8 KV + speculative decoding all on, AOT
+# warmup leaving zero mid-serve recompiles, and the pool's 'pages' axis
+# halving per-device resident KV (asserted inside the module).
+echo "== smoke: benchmarks/sharded_serve.py --smoke (1x2 mesh parity) =="
+python benchmarks/sharded_serve.py --smoke
+
 echo "verify: OK ($MODE)"

@@ -199,6 +199,27 @@ class ServeConfig:
     temperature: float = 0.0
     seed: int = 0
 
+    # ---- mesh-sharded serving (docs/SERVING.md#sharded-serving) -----------
+    # Device mesh for the engine as a "DxM" string (data x model), e.g.
+    # "1x2": params get the tensor-parallel rules (launch/rules.serve_rules),
+    # the paged KV pool + int8 scale sidecars shard by physical page along
+    # 'model'.  None = single-device (bit-identical legacy path).  The
+    # devices must exist before Engine construction — on CPU that means
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N exported before
+    # the first jax import (launch/serve.py --mesh handles this).
+    mesh: Optional[str] = None
+    # Startup AOT compilation: lower + compile every step executable the
+    # serve loop can hit (decode, each mixed prefill+decode bucket width,
+    # spec-verify, COW page-copy) before the first request, maxtext-style.
+    # After warmup Engine.stats()["step_compiles"] must stay 0 — the
+    # recompile tripwire (tests/test_engine_fuzz.py).
+    aot_warmup: bool = False
+    # Extra mixed-step lane widths to pre-compile besides prefill_chunk;
+    # at runtime each mixed step picks the smallest bucket that fits the
+    # planned chunks (padding with idle lanes), so prefill bursts of any
+    # size hit a warmed executable.  () = single-width legacy behavior.
+    prefill_buckets: Tuple[int, ...] = ()
+
     # ---- SLO-aware admission (docs/SERVING.md#slo-routing) ---------------
     # Pricing model (core/accounting.py PAPER_PRICES/PAPER_LATENCY key)
     # used to convert a queued request's predicted tokens into dollars /

@@ -29,6 +29,21 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve_attn_impl(requested: Optional[str], n_devices: int = 1) -> str:
+    """Pick the paged-attention read implementation for an engine.
+
+    None = auto (pallas on TPU, xla elsewhere).  The Pallas paged kernels
+    have no shard_map wrappers yet, so under a >1-device mesh they would
+    be traced with *global* pool shapes and either OOM or silently
+    gather — dispatch falls back to the XLA gather path instead, which
+    GSPMD partitions correctly along the pool's sharded 'pages' axis.
+    """
+    impl = requested or ("pallas" if _on_tpu() else "xla")
+    if impl == "pallas" and n_devices > 1:
+        return "xla"
+    return impl
+
+
 @functools.partial(jax.jit, static_argnames=("window", "bq", "bk", "interpret"))
 def flash_attention(q, k, v, *, window: Optional[int] = None,
                     bq: Optional[int] = None, bk: Optional[int] = None,

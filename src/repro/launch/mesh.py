@@ -38,6 +38,32 @@ def make_host_mesh():
     return _make_mesh((1, 1), ("data", "model"))
 
 
+def make_serve_mesh(spec: str):
+    """Serving mesh from a ``"DxM"`` string (e.g. ``"1x2"``): axes
+    ``("data", "model")`` — replica groups x tensor-parallel shards.
+
+    Validates against the visible device count: jax must already have
+    been initialised with enough devices, which for CPU host meshes means
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` was exported
+    BEFORE the first jax import (launch/serve.py does this for --mesh).
+    """
+    import re
+    m = re.fullmatch(r"(\d+)x(\d+)", spec.strip().lower())
+    if not m:
+        raise ValueError(f"mesh spec {spec!r} is not of the form 'DxM' "
+                         f"(e.g. '1x2')")
+    d, t = int(m.group(1)), int(m.group(2))
+    if d < 1 or t < 1:
+        raise ValueError(f"mesh spec {spec!r} has a non-positive axis")
+    need, have = d * t, jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"mesh {spec} needs {need} devices but jax sees {have} — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"before the first jax import (CPU), or use fewer shards")
+    return _make_mesh((d, t), ("data", "model"))
+
+
 def mesh_chips(mesh) -> int:
     n = 1
     for s in mesh.devices.shape:

@@ -25,6 +25,14 @@ DEFAULT_RULES = {
     "heads": ("model",),
     "kv_heads": ("model",),
     "experts": ("model",),
+    # Paged KV pool leaves ([pages, page_size, kv_heads, hd]): the pool is
+    # sharded by PHYSICAL PAGE along 'model' — every device owns
+    # num_pages/M pages of every layer.  kv_heads on the same leaf then
+    # falls back to replicated (spec_for's used-axis rule), which is the
+    # right trade: page-granular placement keeps the write scatter and
+    # COW copies local to one shard, while GQA kv_heads (2-8) rarely
+    # divide a wide model axis anyway.
+    "pages": ("model",),
     "layers": (),                   # scanned-layer axis: never sharded
 }
 
@@ -37,6 +45,16 @@ def tp_rules() -> dict:
     r = dict(DEFAULT_RULES)
     r["embed"] = ()
     return r
+
+
+def serve_rules() -> dict:
+    """Serving-engine rules (mesh-sharded Engine): tensor-parallel param
+    placement — weights replicated along 'data', sharded along 'model'
+    where divisible — plus the paged pool's 'pages' axis sharded along
+    'model'.  Decode never wants FSDP: an embed->data shard would
+    all-gather the weights on every step for zero memory benefit at
+    serving batch sizes (same measurement as tp_rules)."""
+    return tp_rules()
 
 
 def decode_rules() -> dict:

@@ -3,8 +3,17 @@
 Runs a batch of reflection-style requests through the engine and prints
 throughput + prefix-cache statistics.  Full configs serve via the decode
 dry-run; --smoke serves the reduced config live on CPU.
+
+``--mesh DxM`` serves mesh-sharded (docs/SERVING.md#sharded-serving):
+params tensor-parallel along 'model', the paged KV pool sharded by
+physical page.  On CPU the devices come from
+``xla_force_host_platform_device_count``, which must be set BEFORE the
+first jax import — which is why jax is imported inside main(), after
+argparse.  ``--aot`` pre-compiles every step shape at startup and prints
+the compile time; the serve loop then reports the recompile tripwire.
 """
 import argparse
+import os
 import time
 
 
@@ -16,7 +25,20 @@ def main():
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve mesh, e.g. 1x2 (data x model)")
+    ap.add_argument("--aot", action="store_true",
+                    help="AOT-compile every step shape at startup")
     args = ap.parse_args()
+
+    if args.mesh:
+        d, _, t = args.mesh.partition("x")
+        need = int(d) * int(t or 1)
+        if need > 1 and "xla_force_host_platform_device_count" not in \
+                os.environ.get("XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={need}").strip()
 
     import jax
 
@@ -28,9 +50,12 @@ def main():
     cfg = get_smoke_config(args.arch).replace(dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    t_init = time.perf_counter()
     engine = Engine(model, params,
                     ServeConfig(max_batch=4, max_seq=512, page_size=16,
-                                prefix_cache=not args.no_prefix_cache))
+                                prefix_cache=not args.no_prefix_cache,
+                                mesh=args.mesh, aot_warmup=args.aot))
+    startup = time.perf_counter() - t_init
 
     convos = [[1] + list(range(10 + 7 * i, 30 + 7 * i))
               for i in range(args.requests)]
@@ -44,15 +69,24 @@ def main():
         for c, r in zip(convos, reqs):
             c += r.output + [99, 98]          # reflection suffix
     dt = time.perf_counter() - t0
-    steps = engine.model_steps
+    st = engine.stats()
     print(f"{args.requests} requests x {args.rounds} rounds in {dt:.2f}s")
-    print(f"decode {steps['decode_steps']} tok "
-          f"({steps['decode_steps']/dt:.1f} tok/s), prefill "
-          f"{steps['prefill_tokens']} tok, extend {steps['extend_tokens']} tok "
-          f"({steps['prefill_chunks']} chunks, {steps['mixed_steps']} mixed "
-          f"steps, max {steps['max_step_prefill_tokens']} prefill tok/step)")
+    print(f"decode {st['decode_steps']} tok "
+          f"({st['decode_steps']/dt:.1f} tok/s), prefill "
+          f"{st['prefill_tokens']} tok, extend {st['extend_tokens']} tok "
+          f"({st['prefill_chunks']} chunks, {st['mixed_steps']} mixed "
+          f"steps, max {st['max_step_prefill_tokens']} prefill tok/step)")
+    print(f"mesh {st['mesh'] or 'single-device'} ({st['n_devices']} dev, "
+          f"attn_impl {st['attn_impl']}): resident KV "
+          f"{st['resident_kv_bytes']} B total, "
+          f"{st['resident_kv_bytes_per_device']} B/device "
+          f"(pool {st.get('kv_pool_pages_used', 0)}/"
+          f"{st.get('kv_pool_pages', 0)} pages)")
+    print(f"startup {startup:.2f}s (AOT compile "
+          f"{st['startup_compile_s']:.2f}s, {st['aot_warmed']} shapes); "
+          f"mid-serve recompiles: {st['step_compiles']}")
     if engine.prefix_cache:
-        print(f"prefix cache: {engine.prefix_cache.stats}")
+        print(f"prefix cache: {engine.prefix_cache.stats_snapshot()}")
 
 
 if __name__ == "__main__":

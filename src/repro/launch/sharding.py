@@ -51,6 +51,22 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def serve_state_shardings(param_defs: PyTree, cache_defs: PyTree,
+                          mesh: Mesh, rules=None) -> Tuple[PyTree, PyTree]:
+    """(params, cache) NamedSharding trees for a mesh-sharded Engine.
+
+    Defaults to launch.rules.serve_rules(): tensor-parallel params
+    (replicated along 'data', sharded along 'model' where divisible) and
+    the paged pool's 'pages' leaf axis sharded along 'model' — per-device
+    resident KV is num_pages/M pages of every layer.
+    """
+    if rules is None:
+        from repro.launch.rules import serve_rules
+        rules = serve_rules()
+    return (sharding_for_defs(param_defs, mesh, rules),
+            sharding_for_defs(cache_defs, mesh, rules))
+
+
 def tree_shardings_for_batch(batch_defs: PyTree, mesh: Mesh, rules=None
                              ) -> PyTree:
     return sharding_for_defs(batch_defs, mesh, rules)

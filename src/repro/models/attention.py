@@ -539,7 +539,16 @@ def _gather_pages(pool_leaf: jax.Array, page_table: jax.Array) -> jax.Array:
     idx = jnp.maximum(page_table, 0)
     g = pool_leaf[idx]                                  # [B, NP, ps, ...]
     B, NP, ps = g.shape[0], g.shape[1], g.shape[2]
-    return g.reshape(B, NP * ps, *pool_leaf.shape[2:])
+    out = g.reshape(B, NP * ps, *pool_leaf.shape[2:])
+    # Mesh serving: the pool is sharded by physical page along 'model',
+    # so this gather is an all-to-all.  Pin the densified result to the
+    # attention compute layout — batch over 'data', kv_heads over
+    # 'model' — instead of letting GSPMD keep it page-sharded, where
+    # every einsum against head-sharded q would re-shuffle it per layer.
+    # No-op without an active mesh (launch/rules.shard_activation).
+    from repro.launch.rules import shard_activation
+    axes = ("batch", None, "kv_heads") + (None,) * (out.ndim - 3)
+    return shard_activation(out, axes)
 
 
 def _paged_write(pool: Dict, k: jax.Array, v: jax.Array, phys: jax.Array,

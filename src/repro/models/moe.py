@@ -139,6 +139,11 @@ def moe_ffn(cfg: ModelConfig, p: Dict, x: jax.Array,
     expanded = jnp.where(keep[..., None], expanded, 0.0)
     expanded = expanded * s_gate[..., None].astype(dt)
     y = jnp.zeros((B, S, d), dt).at[bidx, s_token].add(expanded)
+    # Pin the combine output back on the residual layout (batch over
+    # 'data', replicated along 'model'): the scatter-add otherwise
+    # inherits the expert buffer's layout and every MoE block's residual
+    # add would reshard under a serving mesh.
+    y = shard_activation(y, ("batch", None, None))
     return y.reshape(orig_shape), aux.astype(jnp.float32)
 
 

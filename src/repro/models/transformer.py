@@ -179,6 +179,16 @@ class TransformerLM:
         from repro.launch.rules import shard_activation
         return shard_activation(x, ("batch", "seq_act", None))
 
+    def _shard_serve_act(self, x: jax.Array) -> jax.Array:
+        """Mesh-sharded serving steps: pin the residual stream
+        batch-over-'data', REPLICATED along 'model' — tensor parallelism
+        shards the weights, and the [B, <=chunk, d] decode/extend
+        activations are tiny next to them, so replaying them on every
+        model shard beats scattering + regathering around each block.
+        No-op without an active mesh (single-device engines)."""
+        from repro.launch.rules import shard_activation
+        return shard_activation(x, ("batch",) + (None,) * (x.ndim - 1))
+
     # ---------------- embedding ------------------------------------------
 
     def embed(self, params: PyTree, tokens: jax.Array) -> jax.Array:
@@ -388,7 +398,7 @@ class TransformerLM:
         extend kernel or the XLA gather densify (default).  Ignored by
         the ring path and non-attention layers.
         """
-        x = self.embed(params, tokens)
+        x = self._shard_serve_act(self.embed(params, tokens))
         valid = None
         if n_valid is not None:
             valid = jnp.arange(tokens.shape[1])[None, :] < n_valid[:, None]
@@ -434,7 +444,7 @@ class TransformerLM:
         ``page_table`` ([B, NP]) selects the paged attention path;
         ``attn_impl`` (static) its read implementation (see
         ``prefill_extend``)."""
-        x = self.embed(params, tokens)
+        x = self._shard_serve_act(self.embed(params, tokens))
 
         def unit_body(x, payload):
             unit_params, unit_caches = payload

@@ -65,6 +65,7 @@ analysis reproduces.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
@@ -75,6 +76,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.core.accounting import CostModel, LatencyModel
+from repro.kernels import ops
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_serve_mesh, mesh_chips
+from repro.launch.rules import serve_rules
 from repro.models import layers as L
 from repro.serving import sampler
 from repro.serving.page_pool import PagePool, PagedSnapshot
@@ -88,13 +93,92 @@ PyTree = Any
 COPY_BATCH = 8      # COW page copies applied per jitted scatter call
 
 
+class _StepFn:
+    """One engine step function with explicit compile accounting and AOT
+    warmup (maxtext-style ``engine.aot_compile``).
+
+    Wraps a ``jax.jit``-ed callable and keeps one compiled EXECUTABLE per
+    dynamic-argument signature (shape+dtype of everything after the fixed
+    params/cache state args): ``warm()`` lowers + compiles a signature
+    ahead of time — dynamic args may be ShapeDtypeStructs — and
+    ``__call__`` dispatches straight to the warmed executable.  A call
+    whose signature was never warmed still works (compile-on-miss, the
+    legacy JIT-on-first-call behavior) but increments ``compiles``: the
+    recompile tripwire Engine.stats() surfaces, so shape drift can never
+    silently reintroduce mid-serve compilation stalls.
+
+    In mesh mode every call first ``device_put``s its args onto the
+    expected shardings (a no-op for already-resident state): host-side
+    eager cache edits (_set_slot_cache, snapshot adoption) can therefore
+    never feed an executable a mismatched layout — AOT executables,
+    unlike plain jit, reject rather than reshard.  Compilation happens
+    under ``with mesh`` so in-model shard_activation constraints bind.
+    """
+
+    def __init__(self, fn, name: str, n_fixed: int, mesh=None,
+                 in_shardings=None):
+        self._fn = fn
+        self.name = name
+        self._n_fixed = n_fixed
+        self._mesh = mesh
+        self._in_sh = in_shardings
+        self._exe: Dict[tuple, Any] = {}
+        self.warmed = 0
+        self.compiles = 0
+        self.compile_s: List[float] = []
+
+    @staticmethod
+    def _key(dyn) -> tuple:
+        return tuple((tuple(a.shape), jnp.dtype(a.dtype).name) for a in dyn)
+
+    def _place(self, args):
+        if self._mesh is None or self._in_sh is None:
+            return args
+        return tuple(jax.device_put(a, s)
+                     for a, s in zip(args, self._in_sh))
+
+    def _compile(self, args):
+        t0 = time.perf_counter()
+        ctx = self._mesh if self._mesh is not None else (
+            contextlib.nullcontext())
+        with ctx:
+            exe = self._fn.lower(*args).compile()
+        self.compile_s.append(time.perf_counter() - t0)
+        return exe
+
+    def warm(self, *args) -> None:
+        """Pre-compile one signature; dynamic args may be abstract."""
+        key = self._key(args[self._n_fixed:])
+        if key not in self._exe:
+            self._exe[key] = self._compile(args)
+            self.warmed += 1
+
+    def __call__(self, *args):
+        args = self._place(args)
+        key = self._key(args[self._n_fixed:])
+        exe = self._exe.get(key)
+        if exe is None:
+            exe = self._compile(args)
+            self._exe[key] = exe
+            self.compiles += 1
+        return exe(*args)
+
+
 class Engine:
     def __init__(self, model, params: PyTree, scfg: ServeConfig,
-                 faults=None, clock: Optional[Callable[[], float]] = None):
+                 faults=None, clock: Optional[Callable[[], float]] = None,
+                 mesh=None):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
         self.scfg = scfg
+        # Device mesh (docs/SERVING.md#sharded-serving): an explicit Mesh
+        # wins, else ServeConfig.mesh ("DxM") builds one, else the legacy
+        # single-device engine (None — bit-identical to every prior PR).
+        self.mesh = mesh if mesh is not None else (
+            make_serve_mesh(scfg.mesh) if scfg.mesh else None)
+        self.n_devices = mesh_chips(self.mesh) if self.mesh is not None else 1
+        self._serve_rules = serve_rules() if self.mesh is not None else None
         # Deterministic fault injection (serving/faults.py).  None (the
         # default) and a rate-0 plan are both bit-identical to the
         # un-instrumented engine — pinned by tests/test_faults.py.
@@ -127,13 +211,24 @@ class Engine:
         # Paged-attention read implementation: Pallas page-table-walking
         # kernels on TPU, XLA gather densify elsewhere (interpret-mode
         # Pallas is a correctness tool, not a serving path).  Static per
-        # engine — it is baked into the jitted step closures below.
-        self.attn_impl = scfg.attn_impl or (
-            "pallas" if jax.default_backend() == "tpu" else "xla")
+        # engine — it is baked into the jitted step closures below.  Under
+        # a >1-device mesh the Pallas kernels (no shard_map wrappers yet)
+        # fall back to the XLA gather path, which GSPMD partitions along
+        # the pool's sharded 'pages' axis (kernels/ops.resolve_attn_impl).
+        self.attn_impl = ops.resolve_attn_impl(scfg.attn_impl,
+                                               self.n_devices)
         if self.paged:
             ps = scfg.page_size
             self.pages_per_seq = -(-S // ps)
             num_pages = scfg.num_pages or B * self.pages_per_seq
+            if self.n_devices > 1:
+                # round the pool up to a multiple of the 'model' axis so
+                # the pages dim shards evenly (spec_for would otherwise
+                # silently replicate the whole pool); extra pages only
+                # ever add headroom
+                m_ax = dict(zip(self.mesh.axis_names,
+                                self.mesh.devices.shape)).get("model", 1)
+                num_pages = -(-num_pages // m_ax) * m_ax
             if num_pages < self.pages_per_seq:
                 raise ValueError(
                     f"num_pages={num_pages} cannot hold one max_seq request "
@@ -183,6 +278,14 @@ class Engine:
             self._ring_cap = cap
         # Per-step fresh-prefill token budget.
         self.prefill_budget = max(1, scfg.prefill_token_budget)
+        # Mixed-step width buckets: each mixed step runs at the smallest
+        # pre-compilable width that fits its planned chunks, so prefill
+        # bursts of any size hit a warmed executable.  The full chunk
+        # width is always the last bucket — without scfg.prefill_buckets
+        # this is exactly the legacy single-width step.
+        self._mixed_buckets = sorted(
+            {max(1, min(int(w), self.chunk)) for w in scfg.prefill_buckets}
+            | {self.chunk})
 
         # SLO-aware admission (docs/SERVING.md#slo-routing): price a
         # queued request's predicted tokens against its own ceilings.
@@ -222,6 +325,24 @@ class Engine:
             if self.paged
             else model.cache_defs(1, S, seq_shard=False,
                                   kv_dtype=self.kv_dtype))
+        # Mesh placement: params get the tensor-parallel serve rules, the
+        # cache its logical-axis layout (paged pool leaves shard by
+        # physical page along 'model', dense per-slot state along the
+        # trivial 'data' axis), and the blank row replicates — eager
+        # slot resets mix it with sharded leaves, so it must live on the
+        # same device set.
+        if self.mesh is not None:
+            params_sh, cache_sh = SH.serve_state_shardings(
+                model.param_defs(), defs, self.mesh, self._serve_rules)
+            rep = SH.replicated(self.mesh)
+            self.params = jax.device_put(self.params, params_sh)
+            self.cache = jax.device_put(self.cache, cache_sh)
+            self._blank_row = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x, rep), self._blank_row)
+            self._cache_sh = cache_sh
+        else:
+            params_sh = cache_sh = rep = None
+            self._cache_sh = None
         # bytes of one physical page across every layer's pool (snapshot
         # accounting)
         self._page_nbytes = 0
@@ -263,35 +384,67 @@ class Engine:
                             "nan_quarantines": 0, "crash_recoveries": 0,
                             "stuck_rows": 0}
 
+        # Step executables.  Every step fn is wrapped in _StepFn: compile
+        # accounting (the recompile tripwire in stats()) + per-signature
+        # AOT warmup via aot_compile().  In mesh mode each carries
+        # explicit in/out shardings — params/cache at their resident
+        # layout, dynamic host args replicated, logits gathered
+        # replicated (they go to the host for sampling anyway), and the
+        # donated cache output pinned to its input layout so residency
+        # never drifts across steps.
+        def _mk(fn, name, n_dyn, donate):
+            if self.mesh is None:
+                jit = jax.jit(fn, donate_argnums=(donate,))
+                return _StepFn(jit, name, n_fixed=donate + 1)
+            if name == "copy":
+                in_sh = (cache_sh,) + (rep,) * n_dyn
+                out_sh = cache_sh
+            else:
+                in_sh = (params_sh, cache_sh) + (rep,) * n_dyn
+                out_sh = (rep, cache_sh)
+            jit = jax.jit(fn, donate_argnums=(donate,),
+                          in_shardings=in_sh, out_shardings=out_sh)
+            return _StepFn(jit, name, n_fixed=donate + 1, mesh=self.mesh,
+                           in_shardings=in_sh)
+
         if self.paged:
             impl = self.attn_impl
-            self._decode = jax.jit(
+            self._decode = _mk(
                 lambda p, c, t, pos, pt: model.decode_step(
                     p, c, t, pos, page_table=pt, attn_impl=impl),
-                donate_argnums=(1,))
-            self._mixed = jax.jit(
+                "decode", n_dyn=3, donate=1)
+            self._mixed = _mk(
                 lambda p, c, t, pos0, nv, pt: model.prefill_extend(
                     p, c, t, pos0, n_valid=nv, page_table=pt,
                     attn_impl=impl),
-                donate_argnums=(1,))
-            self._copy = jax.jit(self._copy_pages_fn, donate_argnums=(0,))
+                "mixed", n_dyn=4, donate=1)
+            self._copy = _mk(self._copy_pages_fn, "copy", n_dyn=2, donate=0)
             if self.spec:
-                self._verify = jax.jit(
+                self._verify = _mk(
                     lambda p, c, t, pos0, nv, pt: model.prefill_extend(
                         p, c, t, pos0, n_valid=nv, page_table=pt,
                         all_logits=True, attn_impl=impl),
-                    donate_argnums=(1,))
+                    "verify", n_dyn=4, donate=1)
         else:
-            self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
-            self._mixed = jax.jit(
+            self._decode = _mk(
+                lambda p, c, t, pos: model.decode_step(p, c, t, pos),
+                "decode", n_dyn=2, donate=1)
+            self._mixed = _mk(
                 lambda p, c, t, pos0, nv: model.prefill_extend(
                     p, c, t, pos0, n_valid=nv),
-                donate_argnums=(1,))
+                "mixed", n_dyn=3, donate=1)
             if self.spec:
-                self._verify = jax.jit(
+                self._verify = _mk(
                     lambda p, c, t, pos0, nv: model.prefill_extend(
                         p, c, t, pos0, n_valid=nv, all_logits=True),
-                    donate_argnums=(1,))
+                    "verify", n_dyn=3, donate=1)
+
+        # Startup AOT compilation (docs/SERVING.md#sharded-serving):
+        # compile every reachable step shape before the first request so
+        # the serve loop never JITs mid-traffic.
+        self.compile_stats: Dict[str, Any] = {}
+        if scfg.aot_warmup:
+            self.aot_compile()
 
     # ------------------------------------------------------------------ API
 
@@ -345,6 +498,124 @@ class Engine:
         for _ in range(max_steps):
             if not self.step():
                 break
+
+    # --------------------------------------------- AOT warmup + statistics
+
+    def _step_fns(self) -> Dict[str, _StepFn]:
+        fns = {"decode": self._decode, "mixed": self._mixed}
+        if self.paged:
+            fns["copy"] = self._copy
+        if self.spec:
+            fns["verify"] = self._verify
+        return fns
+
+    def aot_compile(self) -> Dict[str, Any]:
+        """Lower + compile every step executable the serve loop can reach
+        (maxtext-style startup AOT): the [B, 1] decode step, the mixed
+        prefill+decode step at every bucket width, the [B, 1+spec_tokens]
+        verify step, and the COW page-copy scatter — plus throwaway
+        executions of the host-facing sampler jits and the rng split, so
+        steady-state traffic triggers ZERO compilations (the tripwire in
+        stats()).  Idempotent; returns per-fn compile-second stats."""
+        t0 = time.perf_counter()
+        B = self.scfg.max_batch
+
+        def sds(*shape):
+            return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+        state = (self.params, self.cache)
+        pt = (sds(B, self.pages_per_seq),) if self.paged else ()
+        self._decode.warm(*state, sds(B, 1), sds(B), *pt)
+        for w in self._mixed_buckets:
+            self._mixed.warm(*state, sds(B, w), sds(B), sds(B), *pt)
+        if self.spec:
+            self._verify.warm(*state, sds(B, 1 + self.spec_tokens),
+                              sds(B), sds(B), *pt)
+        if self.paged:
+            self._copy.warm(self.cache, sds(COPY_BATCH), sds(COPY_BATCH))
+
+        # Host-facing jits outside _StepFn: the batched sampler, the
+        # verify accept/reject kernel, and the per-step rng split.  Cheap
+        # throwaway executions at the exact serving avals (logits arrive
+        # as host arrays in mesh mode — _host_logits — and as device
+        # arrays otherwise, but the aval, hence the compile cache key,
+        # is identical).
+        V, dt = self.cfg.vocab_size, jnp.dtype(self.cfg.dtype)
+        key = jax.random.PRNGKey(0)
+        _, k = jax.random.split(key)
+        temps = jnp.zeros(B, jnp.float32)
+        sampler.sample_batch(jnp.zeros((B, V), dt), k, temps)
+        if self.spec:
+            W = 1 + self.spec_tokens
+            sampler.verify_batch(jnp.zeros((B, W, V), dt),
+                                 jnp.zeros((B, W), jnp.int32),
+                                 jnp.ones(B, jnp.int32),
+                                 jnp.zeros(B, jnp.int32), k, temps)
+
+        self.compile_stats = {
+            "startup_compile_s": time.perf_counter() - t0,
+            "per_fn_compile_s": {n: list(f.compile_s)
+                                 for n, f in self._step_fns().items()},
+            "warmed": {n: f.warmed for n, f in self._step_fns().items()},
+        }
+        return self.compile_stats
+
+    def _kv_stats(self) -> Dict[str, Any]:
+        """Resident-KV accounting, global and per device.  Pool leaves
+        count only their USED pages (the pool is a capacity, not a
+        residency); dense per-slot leaves are always resident.  The
+        per-device number reads each leaf's actual shard shape, so it
+        reflects whatever placement the mesh rules resolved (pages
+        sharded along 'model', dense state replicated)."""
+        total = per_dev = 0
+        used_frac = self.pool.utilization() if self.paged else 1.0
+        for leaf, d in zip(jax.tree_util.tree_leaves(self.cache),
+                           L.tree_defs(self.cache_defs)):
+            nb = leaf.size * leaf.dtype.itemsize
+            snb = (int(np.prod(leaf.sharding.shard_shape(leaf.shape)))
+                   * leaf.dtype.itemsize)
+            frac = used_frac if "pages" in d.axes else 1.0
+            total += int(nb * frac)
+            per_dev += int(snb * frac)
+        out = {"resident_kv_bytes": total,
+               "resident_kv_bytes_per_device": per_dev,
+               "allocated_kv_bytes": sum(
+                   x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(self.cache))}
+        if self.paged:
+            out["kv_pool_pages_used"] = self.pool.used_pages
+            out["kv_pool_pages"] = self.pool.num_pages
+        return out
+
+    def stats(self) -> Dict[str, Any]:
+        """Serving counters + the recompile tripwire.  After
+        aot_compile(), steady traffic must keep ``step_compiles`` at 0 —
+        any positive value means a step shape escaped warmup (asserted
+        by tests/test_engine_fuzz.py)."""
+        fns = self._step_fns()
+        out = dict(self.model_steps)
+        out["step_compiles"] = sum(f.compiles for f in fns.values())
+        out["step_compiles_by_fn"] = {n: f.compiles for n, f in fns.items()}
+        out["aot_warmed"] = sum(f.warmed for f in fns.values())
+        out["startup_compile_s"] = self.compile_stats.get(
+            "startup_compile_s", 0.0)
+        out["n_devices"] = self.n_devices
+        out["mesh"] = (dict(zip(self.mesh.axis_names,
+                                self.mesh.devices.shape))
+                       if self.mesh is not None else None)
+        out["attn_impl"] = self.attn_impl
+        out.update(self._kv_stats())
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.stats_snapshot()
+        return out
+
+    def _host_logits(self, logits):
+        """Mesh mode fetches logits to host before sampling: the sampler
+        jits are plain module-level functions whose other args (rng key)
+        live on device 0, and jax refuses computations whose committed
+        inputs span different device sets.  out_shardings pin logits
+        replicated, so this is one local copy, no cross-device gather."""
+        return np.asarray(logits) if self.mesh is not None else logits
 
     # ----------------------------------------------------------- internals
 
@@ -408,8 +679,7 @@ class Engine:
             dst = np.full(COPY_BATCH, P, np.int32)     # pad -> dropped
             for i, (s, t) in enumerate(batch):
                 src[i], dst[i] = s, t
-            self.cache = self._copy(self.cache, jnp.asarray(src),
-                                    jnp.asarray(dst))
+            self.cache = self._copy(self.cache, src, dst)
 
     def _release_slot_pages(self, slot: int) -> None:
         pages = [int(p) for p in self.page_tables[slot] if p >= 0]
@@ -1172,7 +1442,7 @@ class Engine:
             if drafts else None)
         if self.paged:
             self._flush_copies()
-            pt = jnp.asarray(self.page_tables, jnp.int32)
+            pt = self.page_tables.astype(np.int32)
         else:
             pt = None
         decode_rows = [i for i, r in enumerate(self.slots)
@@ -1205,11 +1475,12 @@ class Engine:
             # nv=0 no-op — the decode step has no validity mask, so it
             # would scatter a stale (pos, next_token) into pages the row
             # already prefilled or shares copy-on-write.
-            tokens = jnp.asarray(self.next_token[:, None], jnp.int32)
-            pos = jnp.asarray(self.pos, jnp.int32)
+            tokens = self.next_token[:, None].astype(np.int32)
+            pos = self.pos.astype(np.int32)
             args = (self.params, self.cache, tokens, pos)
             logits, self.cache = (self._decode(*args, pt) if self.paged
                                   else self._decode(*args))
+            logits = self._host_logits(logits)
             self.model_steps["decode_batch_steps"] += 1
             self.model_steps["decode_steps"] += len(decode_rows)
             if self.faults is not None:
@@ -1224,8 +1495,12 @@ class Engine:
                 self._postprocess_decode(slot, sampled)
             return True
 
-        # mixed step: decode rows ride in lane 0; prefill rows get chunks
-        B, W = len(self.slots), self.chunk
+        # mixed step: decode rows ride in lane 0; prefill rows get chunks.
+        # Width = the smallest pre-compiled bucket that fits this step's
+        # chunks (defaults to the single full-chunk bucket).
+        B = len(self.slots)
+        need = max(plan.values()) if plan else 1
+        W = next(w for w in self._mixed_buckets if w >= need)
         toks = np.zeros((B, W), np.int32)
         pos0 = np.zeros(B, np.int32)
         nv = np.zeros(B, np.int32)
@@ -1239,10 +1514,10 @@ class Engine:
             toks[slot, :n] = target[req.prefill_pos:req.prefill_pos + n]
             pos0[slot] = req.prefill_pos
             nv[slot] = n
-        args = (self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(pos0), jnp.asarray(nv))
+        args = (self.params, self.cache, toks, pos0, nv)
         logits, self.cache = (self._mixed(*args, pt) if self.paged
                               else self._mixed(*args))
+        logits = self._host_logits(logits)
         self.model_steps["mixed_steps"] += 1
         self.model_steps["decode_steps"] += len(decode_rows)
         self.model_steps["max_step_prefill_tokens"] = max(
@@ -1294,11 +1569,10 @@ class Engine:
             toks[slot, :n] = target[req.prefill_pos:req.prefill_pos + n]
             pos0[slot] = req.prefill_pos
             nv[slot] = n
-        toks_j = jnp.asarray(toks)
-        args = (self.params, self.cache, toks_j, jnp.asarray(pos0),
-                jnp.asarray(nv))
+        args = (self.params, self.cache, toks, pos0, nv)
         logits_all, self.cache = (self._verify(*args, pt) if self.paged
                                   else self._verify(*args))
+        logits_all = self._host_logits(logits_all)
         self.model_steps["verify_steps"] += 1
         self.model_steps["decode_steps"] += len(decode_rows)
         self.model_steps["max_step_prefill_tokens"] = max(
@@ -1316,8 +1590,8 @@ class Engine:
                 temps[i] = r.temperature
         self.rng, k = jax.random.split(self.rng)
         n_emit, emit = sampler.verify_batch(
-            logits_all, toks_j, jnp.asarray(nv), jnp.asarray(ndraft), k,
-            jnp.asarray(temps))
+            logits_all, jnp.asarray(toks), jnp.asarray(nv),
+            jnp.asarray(ndraft), k, jnp.asarray(temps))
         n_emit = np.asarray(n_emit)
         emit = np.asarray(emit)
         # prefill rows: emit[:, 0] is the sample at their last valid lane

@@ -62,6 +62,12 @@ class PagePool:
         """True when a write into ``page`` must copy first (shared)."""
         return self.refcount[page] > 1
 
+    def utilization(self) -> float:
+        """Fraction of physical pages currently held (0.0-1.0).  The
+        engine's resident-KV accounting scales the pool's device bytes by
+        this — allocated pool capacity is not residency."""
+        return self.used_pages / self.num_pages
+
     # ----------------------------------------------------------- lifecycle
 
     def alloc(self) -> Optional[int]:

@@ -244,3 +244,11 @@ class PrefixCache:
             else:
                 total += e.nbytes
         return total
+
+    def stats_snapshot(self) -> dict:
+        """One flat dict for reporting (launch/serve.py, Engine.stats):
+        the hit/miss counters plus current entry count and pinned bytes."""
+        out = dict(self.stats)
+        out["entries"] = len(self.entries)
+        out["pinned_bytes"] = self.nbytes
+        return out

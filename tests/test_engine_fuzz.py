@@ -106,6 +106,35 @@ def test_engine_fuzz_spec_parity(model_setup, args):
     assert outs[True] == outs[False], "speculation changed greedy outputs"
 
 
+def test_engine_aot_recompile_tripwire(model_setup):
+    """AOT warmup must cover EVERY step shape the serve loop can hit:
+    after ``aot_warmup=True`` startup, a mixed workload (chunked prefill,
+    pure decode, speculative verify, page-table COW copies) registers
+    ZERO mid-serve compilations on the ``step_compiles`` tripwire."""
+    model, params = model_setup
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=3, max_seq=128, page_size=8,
+                             kv_dtype="int8", spec_decode=True,
+                             spec_tokens=4, aot_warmup=True))
+    st = eng.stats()
+    assert st["aot_warmed"] >= 3          # decode + mixed + verify (+copy)
+    assert st["startup_compile_s"] > 0.0
+    motif = list(range(7, 13))
+    for rnd in range(2):                  # round 2 re-prefills grown convos
+        rr = [Request(prompt=[1 + i] + motif * (2 + rnd) + [3] * (5 * rnd),
+                      max_new_tokens=6, eos_id=None) for i in range(3)]
+        for r in rr:
+            eng.submit(r)
+        eng.run()
+        assert all(r.status is Status.DONE for r in rr)
+    st = eng.stats()
+    assert st["step_compiles"] == 0, \
+        f"serve loop recompiled mid-serve: {st['step_compiles_by_fn']}"
+    assert sum(eng.model_steps[k] for k in
+               ("decode_batch_steps", "verify_steps", "mixed_steps")) > 0
+    eng.pool.check()
+
+
 @requires_hypothesis
 @settings(max_examples=10, deadline=None,
           suppress_health_check=[HealthCheck.function_scoped_fixture])

@@ -1,12 +1,19 @@
 """Sharding-rule and HLO-cost-model tests (host mesh; the 512-device
-production mesh is exercised by launch/dryrun.py in its own process)."""
+production mesh is exercised by launch/dryrun.py in its own process,
+and the multi-device serving parity pin below spawns its own child
+because the host-device-count XLA flag must precede jax init)."""
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.hlocost import analyze, parse_module
-from repro.launch.rules import DEFAULT_RULES, spec_for
+from repro.launch.rules import DEFAULT_RULES, serve_rules, spec_for
 
 
 class FakeMesh:
@@ -16,8 +23,9 @@ class FakeMesh:
         self.devices = np.zeros(shape)
 
 
-MESH = FakeMesh(("data", "model"), (16, 16))
+MESH = FakeMesh(("data", "model"), (16, 16))          # make_production_mesh
 MESH3 = FakeMesh(("pod", "data", "model"), (2, 16, 16))
+HOST2 = FakeMesh(("data", "model"), (1, 2))           # make_serve_mesh("1x2")
 
 
 def test_basic_rules():
@@ -48,6 +56,114 @@ def test_kv_cache_spec():
     spec = spec_for((128, 32768, 8, 128), ("batch", "kv_seq", "kv_heads", None),
                     MESH)
     assert spec == P("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# serve rules: paged pool + int8 sidecar placement (mesh-sharded Engine)
+# ---------------------------------------------------------------------------
+
+def test_serve_rules_paged_pool_production_mesh():
+    """Pool leaves shard by PHYSICAL PAGE along 'model' on the production
+    (16, 16) mesh shape; kv_heads on the same leaf falls back replicated
+    (spec_for's used-axis rule), and the int8 scale sidecars follow their
+    pages so COW/snapshot mechanics move scales with payload."""
+    r = serve_rules()
+    # payload pools [pages, page_size, kv_heads, head_dim]
+    assert spec_for((256, 16, 8, 128), ("pages", None, "kv_heads", None),
+                    MESH, r) == P("model")
+    # int8 scale sidecars [pages, page_size, kv_heads]
+    assert spec_for((256, 16, 8), ("pages", None, "kv_heads"),
+                    MESH, r) == P("model")
+    # scan-stacked pool leaf: layers never sharded, pages still are
+    assert spec_for((28, 256, 16, 8, 128),
+                    ("layers", "pages", None, "kv_heads", None),
+                    MESH, r) == P(None, "model")
+    # serve rules are tensor-parallel: no FSDP shard on embed
+    assert spec_for((4096, 11008), ("embed", "ff"), MESH, r) == \
+        P(None, "model")
+
+
+def test_serve_rules_paged_pool_host_mesh():
+    """Same placement on the 1x2 host serving mesh (the sharded smoke
+    configuration scripts/verify.sh gates on)."""
+    r = serve_rules()
+    assert spec_for((128, 16, 2, 64), ("pages", None, "kv_heads", None),
+                    HOST2, r) == P("model")
+    assert spec_for((128, 16, 2), ("pages", None, "kv_heads"),
+                    HOST2, r) == P("model")
+    # an odd page count can't split 2 ways: pages drops to replicated and
+    # kv_heads (2 % 2 == 0) picks the now-free model axis instead.  The
+    # engine rounds num_pages up to a model-axis multiple so the pool
+    # never actually lands here.
+    assert spec_for((127, 16, 2, 64), ("pages", None, "kv_heads", None),
+                    HOST2, r) == P(None, None, "model")
+
+
+def test_paged_pool_defs_resolve_sharded():
+    """The REAL pool defs (attention.paged_kv_cache_def with int8 KV)
+    carry logical axes that resolve to page-sharded placement under
+    serve_rules — payload pools and all three scale sidecars."""
+    from repro.models.attention import paged_kv_cache_def
+    from repro.models.registry import get_smoke_config
+
+    cfg = get_smoke_config("qwen3_0_6b")
+    d = paged_kv_cache_def(cfg, num_pages=256, page_size=16,
+                           dtype=jnp.float32, kv_dtype="int8")
+    assert {"kp", "vp", "ksp", "kzp", "vsp"} <= set(d)
+    for name, leaf in d.items():
+        spec = spec_for(leaf.shape, leaf.axes, MESH, serve_rules())
+        assert spec == P("model"), (name, spec)
+
+
+_PARITY_CHILD = textwrap.dedent("""
+    import jax, json
+    from repro.configs.base import ServeConfig
+    from repro.models.registry import build_model, get_smoke_config
+    from repro.serving.engine import Engine
+    from repro.serving.request import Request, Status
+
+    cfg = get_smoke_config("qwen3_0_6b").replace(dtype="float32")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    outs = {}
+    for mesh in (None, "1x2"):
+        eng = Engine(m, params,
+                     ServeConfig(max_batch=4, max_seq=128, page_size=16,
+                                 kv_dtype="int8", spec_decode=True,
+                                 spec_tokens=4, aot_warmup=True, mesh=mesh))
+        motif = list(range(5, 12))
+        rr = [Request(prompt=[1 + i] + motif * 3, max_new_tokens=8,
+                      eos_id=None) for i in range(3)]
+        for r in rr:
+            eng.submit(r)
+        eng.run()
+        assert all(r.status is Status.DONE for r in rr)
+        st = eng.stats()
+        assert st["step_compiles"] == 0, st
+        assert st["n_devices"] == (2 if mesh else 1)
+        outs[str(mesh)] = [r.output for r in rr]
+    assert outs["None"] == outs["1x2"], outs
+    print("PARITY_OK", json.dumps(outs["1x2"]))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_serving_greedy_parity_host_mesh():
+    """A 1x2 host-mesh engine with paged KV + int8 KV + speculative
+    decoding ALL ON must serve greedy outputs bit-identical to the
+    single-device engine, with zero mid-serve recompiles after AOT
+    warmup.  Child process: the host-device-count flag must be exported
+    before the first jax import."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    out = subprocess.run([sys.executable, "-c", _PARITY_CHILD],
+                         capture_output=True, text=True, env=env,
+                         timeout=560, cwd=repo)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "PARITY_OK" in out.stdout
 
 
 # ---------------------------------------------------------------------------
