@@ -42,6 +42,7 @@ MODULES = [
     "benchmarks.cascade",
     "benchmarks.chaos",
     "benchmarks.sharded_serve",
+    "benchmarks.fleet",
 ]
 
 OUT_DIR = os.path.dirname(os.path.abspath(__file__))

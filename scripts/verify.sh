@@ -87,4 +87,12 @@ python benchmarks/chaos.py --smoke
 echo "== smoke: benchmarks/sharded_serve.py --smoke (1x2 mesh parity) =="
 python benchmarks/sharded_serve.py --smoke
 
+# Fleet routing smoke: the seeded-trace A/B over 4 simulated replicas
+# (real PrefixCache + PagePool) — prefix-affinity routing must beat the
+# round-robin baseline on fleet prefix-hit rate AND p99 TTFT at goodput
+# no worse, with zero leaked pages after cache release (PagePool.check()
+# + used_pages == 0, asserted inside the module).
+echo "== smoke: benchmarks/fleet.py --smoke (fleet routing A/B) =="
+python benchmarks/fleet.py --smoke
+
 echo "verify: OK ($MODE)"

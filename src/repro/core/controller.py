@@ -55,7 +55,7 @@ from repro.core import quality_sim as QS
 from repro.core.accounting import CostModel, LatencyModel
 from repro.core.pareto import ConfigPoint, OnlineFrontier, sweet_spot
 from repro.core.parallel_sampling import majority_vote
-from repro.serving.request import BudgetTier, TokenUsage
+from repro.serving.request import DEADLINE_EPS, BudgetTier, TokenUsage
 
 # escalation ladder: each stalled escalation moves one tier up
 _NEXT_TIER = {BudgetTier.NONE: BudgetTier.LOW, BudgetTier.LOW: BudgetTier.HIGH}
@@ -76,7 +76,7 @@ class SLO:
         return ((self.max_cost_usd is None
                  or cost_usd <= self.max_cost_usd + 1e-12)
                 and (self.max_latency_s is None
-                     or latency_s <= self.max_latency_s + 1e-9))
+                     or latency_s <= self.max_latency_s + DEADLINE_EPS))
 
 
 @dataclass

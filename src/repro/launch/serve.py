@@ -11,6 +11,13 @@ physical page.  On CPU the devices come from
 first jax import — which is why jax is imported inside main(), after
 argparse.  ``--aot`` pre-compiles every step shape at startup and prints
 the compile time; the serve loop then reports the recompile tripwire.
+
+``--replicas N`` serves a FLEET instead of one engine: N engines behind
+the prefix-affinity router (docs/SERVING.md#fleet-routing), replaying a
+seeded trace (``--trace-requests`` arrivals) and printing the fleet
+report — per-replica assignment counts, p50/p99 TTFT, goodput, fleet
+prefix-hit rate, spillovers/steals.  ``--policy round_robin`` swaps in
+the baseline for an A/B.
 """
 import argparse
 import os
@@ -29,6 +36,14 @@ def main():
                     help="serve mesh, e.g. 1x2 (data x model)")
     ap.add_argument("--aot", action="store_true",
                     help="AOT-compile every step shape at startup")
+    ap.add_argument("--replicas", type=int, default=0, metavar="N",
+                    help="serve a fleet of N engines behind the router")
+    ap.add_argument("--policy", default="affinity",
+                    choices=("affinity", "round_robin"),
+                    help="fleet routing policy (with --replicas)")
+    ap.add_argument("--trace-requests", type=int, default=24,
+                    help="trace arrivals to replay (with --replicas)")
+    ap.add_argument("--trace-seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.mesh:
@@ -50,6 +65,54 @@ def main():
     cfg = get_smoke_config(args.arch).replace(dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+
+    if args.replicas > 0:
+        from collections import Counter
+
+        from repro.serving.fleet import EngineReplica, Router, RouterConfig
+        from repro.serving.trace import TraceConfig, generate_trace
+
+        scfg = ServeConfig(max_batch=4, max_seq=256, page_size=16,
+                           prefix_cache=not args.no_prefix_cache)
+        t_init = time.perf_counter()
+        replicas = [EngineReplica(i, Engine(model, params, scfg))
+                    for i in range(args.replicas)]
+        startup = time.perf_counter() - t_init
+        trace = generate_trace(TraceConfig(
+            n_requests=args.trace_requests, seed=args.trace_seed,
+            mean_rate=50.0, vocab=cfg.vocab_size,
+            out_tokens=(4, args.max_new)))
+        router = Router(replicas, RouterConfig(policy=args.policy))
+        t0 = time.perf_counter()
+        report = router.run_trace(trace)
+        dt = time.perf_counter() - t0
+        s = report.summary()
+        per_rep = Counter(rid for _, rid in report.assignments)
+        print(f"fleet: {args.replicas} replicas, policy={args.policy}, "
+              f"{s['requests']} requests in {dt:.2f}s "
+              f"(startup {startup:.2f}s)")
+        print(f"  assignment: "
+              + " ".join(f"r{i}={per_rep.get(i, 0)}"
+                         for i in range(args.replicas))
+              + f"  spillovers={s['spillovers']} steals={s['steals']}")
+        print(f"  ttft p50={s['p50_ttft_ms']:.1f}ms "
+              f"p99={s['p99_ttft_ms']:.1f}ms goodput={s['goodput']:.3f} "
+              f"prefix_hit_rate={s['prefix_hit_rate']:.3f}")
+        print(f"  preempt/slo/timeout: {s['preemptions']}"
+              f"/{s['slo_rejections']}/{s['timeouts']}")
+        leaked = router.shutdown_check()
+        print(f"  leaked pages after cache release: {leaked}")
+        for r in replicas:
+            st = r.engine.stats_snapshot()
+            pc = st.get("prefix_cache", {})
+            print(f"  r{r.rid}: prefill={st['prefill_tokens']} "
+                  f"decode={st['decode_tokens']} "
+                  f"pre={st['preemptions']} "
+                  f"cache hits={pc.get('hits', 0)}"
+                  f"+{pc.get('partial_hits', 0)}p"
+                  f"/{pc.get('misses', 0)}m")
+        return
+
     t_init = time.perf_counter()
     engine = Engine(model, params,
                     ServeConfig(max_batch=4, max_seq=512, page_size=16,

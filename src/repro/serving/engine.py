@@ -84,7 +84,8 @@ from repro.models import layers as L
 from repro.serving import sampler
 from repro.serving.page_pool import PagePool, PagedSnapshot
 from repro.serving.prefix_cache import (PrefixCache, config_is_recurrent)
-from repro.serving.request import BudgetTier, Request, Status, TokenUsage
+from repro.serving.request import (DEADLINE_EPS, BudgetTier, Request,
+                                   Status, TokenUsage)
 from repro.serving.speculator import (NGramSpeculator, draft_corpus,
                                       external_draft_proposal)
 
@@ -609,6 +610,25 @@ class Engine:
             out["prefix_cache"] = self.prefix_cache.stats_snapshot()
         return out
 
+    def stats_snapshot(self) -> Dict[str, Any]:
+        """Compact per-replica counters for fleet aggregation
+        (serving/fleet.py): the scheduler counters that sum meaningfully
+        across replicas, live occupancy, and the prefix cache's own
+        snapshot.  stats() remains the full single-engine diagnostic view
+        (mesh/AOT/KV accounting, recompile tripwire)."""
+        out = {k: self.model_steps[k] for k in
+               ("prefill_tokens", "extend_tokens", "decode_tokens",
+                "preemptions", "slo_rejections", "timeouts", "stalls",
+                "errors")}
+        out["in_flight"] = sum(r is not None for r in self.slots)
+        out["queued"] = len(self.queue)
+        if self.paged:
+            out["kv_pool_pages_used"] = self.pool.used_pages
+            out["kv_pool_pages"] = self.pool.num_pages
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.stats_snapshot()
+        return out
+
     def _host_logits(self, logits):
         """Mesh mode fetches logits to host before sampling: the sampler
         jits are plain module-level functions whose other args (rng key)
@@ -910,7 +930,7 @@ class Engine:
         lat = self.latency_model.latency(pred)
         if ((req.max_cost_usd is None or cost <= req.max_cost_usd + 1e-12)
                 and (req.max_latency_s is None
-                     or lat <= req.max_latency_s + 1e-9)):
+                     or lat <= req.max_latency_s + DEADLINE_EPS)):
             return False
         req.status = Status.DONE
         req.stop_reason = "slo"
@@ -959,9 +979,11 @@ class Engine:
         now = self.clock()
 
         def expired(r: Request) -> bool:
+            # same epsilon as admission (DEADLINE_EPS): a request accepted
+            # exactly at its deadline must not time out on its first tick
             return (r.max_latency_s is not None
                     and r.submitted_at is not None
-                    and now - r.submitted_at > r.max_latency_s)
+                    and now - r.submitted_at > r.max_latency_s + DEADLINE_EPS)
 
         if any(expired(r) for r in self.queue):
             keep: deque[Request] = deque()

@@ -114,7 +114,11 @@ class PrefixCache:
         self.recurrent = (config_is_recurrent(model_cfg)
                           if recurrent is None else recurrent)
         self.entries: Dict[Tuple[int, ...], Entry] = {}
-        self.version = 0        # bumped on insert; lets pollers skip scans
+        # bumped on EVERY entry-set mutation (insert, replace, eviction);
+        # pollers (Engine._fast_forward, fleet routers) compare it to skip
+        # scans, so a mutation that doesn't bump it would leave them
+        # acting on a stale view of the entry set
+        self.version = 0
         self.stats = {"hits": 0, "partial_hits": 0, "misses": 0,
                       "evictions": 0, "tokens_saved": 0,
                       "boundary_snapshots": 0}
@@ -152,6 +156,12 @@ class PrefixCache:
                 if best is None or cut > best[0]:
                     best = (cut, e, "partial")
         if best is not None and best[0] <= min_len:
+            # a candidate exists but is too short to use: still a miss for
+            # this lookup — counting it keeps hits + partial_hits + misses
+            # equal to the number of recorded lookups (fleet hit-rate
+            # reporting divides by that denominator)
+            if record_miss and not peek:
+                self.stats["misses"] += 1
             return LookupResult(0, None, "miss")
         if best is None:
             if record_miss and not peek:
@@ -198,6 +208,7 @@ class PrefixCache:
         if entry.on_evict is not None:
             entry.on_evict()
         self.stats["evictions"] += 1
+        self.version += 1       # evictions mutate the entry set too
 
     def evict_lru(self) -> bool:
         """Evict the least-recently-used entry (page-pool pressure relief

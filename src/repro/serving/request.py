@@ -8,6 +8,14 @@ from typing import List, Optional
 
 _uid = itertools.count()
 
+# One epsilon for EVERY deadline comparison — controller SLO admission,
+# engine admission pricing, and the runtime timeout sweep.  The three
+# checks must agree on the boundary: a request admitted exactly at its
+# deadline (admission accepts lat <= max_latency_s + eps) must not be
+# finalized "timeout" on its first tick because the sweep used a
+# stricter boundary.
+DEADLINE_EPS = 1e-9
+
 
 class Status(Enum):
     QUEUED = "queued"

@@ -1,0 +1,406 @@
+"""Fleet routing (serving/fleet.py + serving/trace.py) and the
+prefix-cache / deadline accounting fixes that fleet reporting relies on.
+
+Host-only tests (trace generation, PrefixCache stats invariants, router
+determinism, simulated spillover/steal/preemption) run in the fast
+loop; engine-integration tests (deadline epsilon boundary, live
+two-replica fleet) are marked ``slow`` and share one smoke-model
+fixture.
+"""
+import pytest
+
+from repro.serving.fleet import (EngineReplica, Router, RouterConfig,
+                                 SimulatedReplica, affinity_key)
+from repro.serving.page_pool import PagedSnapshot, PagePool
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.request import DEADLINE_EPS
+from repro.serving.trace import (SLO_CLASSES, TraceConfig, generate_trace,
+                                 group_prefix)
+
+
+@pytest.fixture(scope="module")
+def model_setup():
+    import jax
+
+    from repro.models.registry import build_model, get_smoke_config
+    cfg = get_smoke_config("qwen3_0_6b").replace(dtype="float32")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0)), cfg
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions: PrefixCache.version on eviction
+# ---------------------------------------------------------------------------
+
+
+def test_version_bumps_on_explicit_eviction():
+    """evict_lru mutates the entry set, so pollers comparing version
+    must see a bump (pre-fix: only insert bumped it, so a poller's
+    cached view went stale across evictions)."""
+    pc = PrefixCache(page_size=4, max_entries=4, recurrent=False)
+    pc.insert([1, 2, 3, 4], "snap-a")
+    pc.insert([5, 6, 7, 8], "snap-b")
+    v = pc.version
+    assert pc.evict_lru()
+    assert pc.version > v
+
+
+def test_version_bumps_on_capacity_eviction():
+    """Insert at capacity evicts the LRU victim: TWO mutations (the
+    eviction and the insert), and version must count both."""
+    pc = PrefixCache(page_size=4, max_entries=2, recurrent=False)
+    pc.insert([1, 2, 3, 4], "a")
+    pc.insert([5, 6, 7, 8], "b")
+    v = pc.version
+    pc.insert([9, 10, 11, 12], "c")     # evicts "a", inserts "c"
+    assert pc.version == v + 2
+    assert pc.stats["evictions"] == 1
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions: min_len-filtered lookups count as misses
+# ---------------------------------------------------------------------------
+
+
+def test_min_len_filtered_lookup_counts_as_miss():
+    """A candidate exists but is too short to use: the lookup found
+    nothing usable, and stats must say so (pre-fix the return path
+    skipped the miss counter, so hits+partial+misses undercounted
+    lookups and every hit-rate denominator was wrong)."""
+    pc = PrefixCache(page_size=4, max_entries=4, recurrent=False)
+    pc.insert([1, 2, 3, 4], "short")
+    res = pc.lookup([1, 2, 3, 4, 9, 9], min_len=4)   # 4 <= min_len: unusable
+    assert res.kind == "miss"
+    assert pc.stats["misses"] == 1
+
+
+def test_min_len_filter_respects_record_miss_and_peek():
+    """The engine's in-flight fast-forward (record_miss=False) and SLO
+    admission peek must stay invisible to stats even on the filtered
+    path — only real recorded lookups count."""
+    pc = PrefixCache(page_size=4, max_entries=4, recurrent=False)
+    pc.insert([1, 2, 3, 4], "short")
+    pc.lookup([1, 2, 3, 4, 9, 9], min_len=4, record_miss=False)
+    pc.lookup([1, 2, 3, 4, 9, 9], min_len=4, peek=True)
+    assert pc.stats["misses"] == 0
+
+
+def test_stats_invariant_hits_partials_misses_equals_lookups():
+    """hits + partial_hits + misses == number of recorded (non-peek,
+    record_miss) lookups, across full hits, partial hits, plain misses
+    AND min_len-filtered candidates."""
+    pc = PrefixCache(page_size=4, max_entries=8, recurrent=False)
+    pc.insert([1, 2, 3, 4], "a")
+    pc.insert([5, 6, 7, 8, 9, 10, 11, 12], "b")
+    recorded = 0
+    pc.lookup([1, 2, 3, 4, 0, 0]); recorded += 1          # full hit
+    pc.lookup([5, 6, 7, 8, 0, 0]); recorded += 1          # partial (cut 4)
+    pc.lookup([7, 7, 7, 7]); recorded += 1                # plain miss
+    pc.lookup([1, 2, 3, 4, 0, 0], min_len=4); recorded += 1   # filtered miss
+    pc.lookup([1, 2, 3, 4, 0, 0], peek=True)              # not recorded
+    pc.lookup([1, 2, 3, 4, 0, 0], record_miss=False)      # hit: recorded
+    recorded += 1
+    s = pc.stats
+    assert s["hits"] + s["partial_hits"] + s["misses"] == recorded
+
+
+# ---------------------------------------------------------------------------
+# on_evict fires exactly once per payload
+# ---------------------------------------------------------------------------
+
+
+def test_on_evict_exactly_once_replace_duplicate_evict():
+    """Every payload's on_evict fires exactly once across all three
+    discard paths: replacement by a same-key insert, duplicate boundary
+    publication, and LRU eviction.  (Each callback releases page pins —
+    a double fire corrupts refcounts, a missed fire leaks pages.)"""
+    fired = []
+
+    def cb(tag):
+        return lambda: fired.append(tag)
+
+    pc = PrefixCache(page_size=4, max_entries=2, recurrent=False)
+    pc.insert([1, 2, 3, 4], "a0", on_evict=cb("a0"))
+    pc.insert([1, 2, 3, 4], "a1", on_evict=cb("a1"))      # replaces a0
+    assert fired == ["a0"]
+    pc.insert_boundary([1, 2, 3, 4], "a2", on_evict=cb("a2"))  # duplicate
+    assert fired == ["a0", "a2"]
+    pc.insert([5, 6, 7, 8], "b", on_evict=cb("b"))
+    pc.insert([9, 10, 11, 12], "c", on_evict=cb("c"))     # evicts LRU a1
+    assert fired == ["a0", "a2", "a1"]
+    while pc.evict_lru():
+        pass
+    assert sorted(fired) == ["a0", "a1", "a2", "b", "c"]
+    assert len(fired) == len(set(fired)), "some on_evict fired twice"
+
+
+def test_on_evict_releases_pool_pages():
+    """The callback contract end-to-end with a real pool: pinned
+    snapshot pages go back to the free list exactly when the entry is
+    discarded, never twice."""
+    pool = PagePool(num_pages=4, page_size=4)
+    pages = [pool.alloc(), pool.alloc()]
+    pool.incref(pages)      # snapshot pin on top of the request's ref
+    pc = PrefixCache(page_size=4, max_entries=2, recurrent=False)
+    pc.insert([1, 2, 3, 4],
+              PagedSnapshot(pages=list(pages), n_tokens=8, nbytes=2),
+              on_evict=lambda: pool.decref(pages))
+    pool.decref(pages)      # request released; snapshot pin remains
+    assert pool.used_pages == 2
+    assert pc.evict_lru()
+    assert pool.used_pages == 0
+    pool.check()
+
+
+# ---------------------------------------------------------------------------
+# deadline epsilon unification (engine admission vs runtime sweep)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_deadline_sweep_uses_admission_epsilon(model_setup):
+    """A request exactly AT its deadline boundary (elapsed within
+    DEADLINE_EPS past max_latency_s) must not be reaped: admission
+    accepts lat <= max_latency_s + eps, so the sweep reaping on strict
+    > max_latency_s (the pre-fix behavior) finalized requests the
+    engine had just admitted as feasible.  Clearly past the boundary it
+    must still time out."""
+    from repro.configs.base import ServeConfig
+    from repro.serving.engine import Engine
+    from repro.serving.faults import VirtualClock
+    from repro.serving.request import Request, Status
+
+    model, params, _ = model_setup
+    clk = VirtualClock()
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=2, max_seq=128, page_size=8,
+                             prefix_cache=False, enforce_deadlines=True),
+                 clock=clk)
+    req = Request(prompt=list(range(3, 19)), max_new_tokens=32,
+                  eos_id=None, max_latency_s=1.0)
+    eng.submit(req)
+    for _ in range(6):          # prefill + a few decode steps at t=0
+        eng.step()
+    assert req.status is Status.DECODING
+    # inside the epsilon: admission would have accepted this instant,
+    # so the sweep must not reap it (pre-fix: "timeout" here)
+    clk.advance(1.0 + DEADLINE_EPS / 2)
+    eng.step()
+    assert req.stop_reason != "timeout"
+    # clearly past the boundary: reaped
+    clk.advance(DEADLINE_EPS)
+    eng.step()
+    assert req.stop_reason == "timeout"
+    assert eng.model_steps["timeouts"] == 1
+    eng.pool.check()
+    assert eng.pool.used_pages == 0
+
+
+def test_slo_admits_shares_deadline_epsilon():
+    """Controller-side SLO.admits and the engine share one boundary
+    constant: a latency exactly eps past the ceiling is admitted, one
+    past 2*eps is not."""
+    slo = SLO_CLASSES["interactive"]
+    lim = slo.max_latency_s
+    assert slo.admits(0.0, lim + DEADLINE_EPS / 2)
+    assert not slo.admits(0.0, lim + 2 * DEADLINE_EPS)
+
+
+# ---------------------------------------------------------------------------
+# trace generation
+# ---------------------------------------------------------------------------
+
+
+def test_trace_is_replayable():
+    cfg = TraceConfig(n_requests=64, seed=5)
+    a, b = generate_trace(cfg), generate_trace(cfg)
+    assert a == b
+    assert generate_trace(TraceConfig(n_requests=64, seed=6)) != a
+
+
+def test_trace_structure():
+    cfg = TraceConfig(n_requests=200, seed=0)
+    trace = generate_trace(cfg)
+    npfx = cfg.prefix_pages * cfg.page_size
+    assert [t.arrival_s for t in trace] == sorted(t.arrival_s for t in trace)
+    for t in trace:
+        assert t.prompt[:npfx] == group_prefix(t.domain, t.group, npfx,
+                                               cfg.vocab)
+        assert t.slo is SLO_CLASSES[t.slo_class]
+        assert cfg.out_tokens[0] <= t.max_new_tokens <= cfg.out_tokens[1]
+    # group prefixes are what affinity hashes on: same group -> same key
+    k = {}
+    for t in trace:
+        key = affinity_key(t.prompt, cfg.page_size)
+        assert k.setdefault((t.domain, t.group), key) == key
+    assert len(set(k.values())) == len(k), "group prefix hash collision"
+
+
+# ---------------------------------------------------------------------------
+# router determinism + policy behavior
+# ---------------------------------------------------------------------------
+
+
+def _run(policy, n_requests=150, seed=7, n_replicas=4, **rep_kw):
+    trace = generate_trace(TraceConfig(n_requests=n_requests, seed=seed))
+    router = Router([SimulatedReplica(i, **rep_kw)
+                     for i in range(n_replicas)],
+                    RouterConfig(policy=policy))
+    report = router.run_trace(trace)
+    assert router.shutdown_check() == 0, "leaked pages"
+    return report
+
+
+def test_router_determinism_same_seed_same_assignment():
+    a, b = _run("affinity"), _run("affinity")
+    assert a.assignments == b.assignments
+    assert a.summary() == b.summary()
+    r1, r2 = _run("round_robin"), _run("round_robin")
+    assert r1.assignments == r2.assignments
+
+
+def test_round_robin_spreads_evenly():
+    report = _run("round_robin", n_requests=100)
+    counts = [0] * 4
+    for _, rid in report.assignments:
+        counts[rid] += 1
+    assert counts == [25, 25, 25, 25]
+
+
+def test_affinity_groups_share_home_replica():
+    """Absent saturation, every member of a shared-prefix group lands on
+    the group's home replica — the property that concentrates cache
+    reuse.  (Low arrival rate so spillover never triggers.)"""
+    trace = generate_trace(TraceConfig(n_requests=60, seed=2,
+                                       mean_rate=2.0, diurnal_amp=0.0))
+    router = Router([SimulatedReplica(i) for i in range(4)],
+                    RouterConfig(policy="affinity"))
+    report = router.run_trace(trace)
+    assert router.shutdown_check() == 0
+    assert report.spillovers == 0
+    homes = {}
+    rid_of = dict(report.assignments)
+    for t in trace:
+        assert homes.setdefault((t.domain, t.group),
+                                rid_of[t.idx]) == rid_of[t.idx]
+
+
+def test_affinity_beats_round_robin_on_hit_rate():
+    aff, rr = _run("affinity"), _run("round_robin")
+    assert aff.hit_rate() > rr.hit_rate()
+    # consistent denominators (the min_len bugfix feeds this): every
+    # replica's recorded lookups are fully classified
+    for rep in (aff, rr):
+        c = rep.cache_stats
+        assert c["hits"] + c["partial_hits"] + c["misses"] > 0
+
+
+def test_spillover_redirects_from_saturated_home():
+    """Two replicas, one group: all traffic homes to one replica, so a
+    burst must spill to the other once slots + queue depth fill."""
+    trace = generate_trace(TraceConfig(
+        n_requests=40, seed=1, mean_rate=500.0, diurnal_amp=0.0,
+        domain_mix=(("math", 1.0),), groups_per_domain=1))
+    router = Router([SimulatedReplica(i) for i in range(2)],
+                    RouterConfig(policy="affinity", work_steal=False))
+    report = router.run_trace(trace)
+    assert router.shutdown_check() == 0
+    assert report.spillovers > 0
+    assert len({rid for _, rid in report.assignments}) == 2
+
+
+def test_work_stealing_drains_backlog_to_idle_replica():
+    trace = generate_trace(TraceConfig(
+        n_requests=40, seed=1, mean_rate=500.0, diurnal_amp=0.0,
+        domain_mix=(("math", 1.0),), groups_per_domain=1))
+    stealing = Router([SimulatedReplica(i) for i in range(2)],
+                      RouterConfig(policy="affinity", work_steal=True,
+                                   spill_queue_depth=10**6))
+    report = stealing.run_trace(trace)
+    assert stealing.shutdown_check() == 0
+    assert report.steals > 0
+    # the thief actually completed stolen work
+    assert len({c["rid"] for c in report.completions}) == 2
+
+
+def test_page_pressure_preempts_and_replays():
+    """A page-starved replica must preempt the youngest flight (FIFO),
+    replay it, and still complete everything with zero leaks."""
+    trace = generate_trace(TraceConfig(
+        n_requests=12, seed=4, mean_rate=400.0, diurnal_amp=0.0,
+        out_tokens=(40, 48)))
+    router = Router([SimulatedReplica(0, num_pages=24, n_slots=3,
+                                      cache_entries=2)],
+                    RouterConfig(policy="affinity"))
+    report = router.run_trace(trace)
+    assert router.shutdown_check() == 0
+    assert report.counters["preemptions"] > 0
+    finished = [c for c in report.completions if c["reason"] in
+                ("ok", "late")]
+    assert any(c["preemptions"] > 0 for c in finished)
+    assert {c["idx"] for c in report.completions} == {t.idx for t in trace}
+
+
+def test_fleet_scales_to_64_replicas():
+    report = _run("affinity", n_requests=256, seed=3, n_replicas=64)
+    assert report.n_replicas == 64
+    assert len(report.completions) == 256
+
+
+# ---------------------------------------------------------------------------
+# live fleet (real engines)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_live_two_replica_fleet(model_setup):
+    """Two real Engines behind the affinity router replay a small trace:
+    every request terminates, TTFTs are measured, per-replica stats
+    aggregate through Engine.stats_snapshot, and no pages leak."""
+    from repro.configs.base import ServeConfig
+    from repro.serving.engine import Engine
+
+    model, params, cfg = model_setup
+    trace = generate_trace(TraceConfig(
+        n_requests=10, seed=3, mean_rate=50.0, vocab=cfg.vocab_size,
+        out_tokens=(4, 6)))
+    scfg = ServeConfig(max_batch=2, max_seq=256, page_size=16)
+    replicas = [EngineReplica(i, Engine(model, params, scfg))
+                for i in range(2)]
+    router = Router(replicas, RouterConfig(policy="affinity"))
+    report = router.run_trace(trace)
+    assert len(report.completions) == 10
+    assert all(c["reason"] is not None for c in report.completions)
+    assert all(c["ttft_s"] is not None and c["ttft_s"] >= 0
+               for c in report.completions
+               if c["reason"] not in ("slo", "timeout"))
+    for r in replicas:
+        snap = r.engine.stats_snapshot()
+        assert snap["in_flight"] == 0 and snap["queued"] == 0
+        assert "prefix_cache" in snap
+    assert router.shutdown_check() == 0
+
+
+@pytest.mark.slow
+def test_engine_stats_snapshot_counters(model_setup):
+    from repro.configs.base import ServeConfig
+    from repro.serving.engine import Engine
+    from repro.serving.request import Request
+
+    model, params, _ = model_setup
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=2, max_seq=128, page_size=16))
+    req = Request(prompt=list(range(3, 20)), max_new_tokens=4, eos_id=None)
+    eng.submit(req)
+    eng.run()
+    snap = eng.stats_snapshot()
+    assert snap["prefill_tokens"] >= 17
+    assert snap["decode_tokens"] >= 3
+    assert snap["in_flight"] == 0 and snap["queued"] == 0
+    # remaining pool pages are exactly the prefix-cache snapshot pins
+    assert snap["prefix_cache"]["entries"] > 0
+    assert snap["kv_pool_pages_used"] > 0
+    while eng.prefix_cache.evict_lru():
+        pass
+    assert eng.stats_snapshot()["kv_pool_pages_used"] == 0
+    eng.pool.check()
